@@ -1,0 +1,56 @@
+"""Eq. 1 / §4.3 reproduction: unified ACK vs hybrid accelerator latency
+under varying FA/FT workload ratios.
+
+    unified:  (a1 + a2) / beta
+    hybrid:   max(a1 / b1, a2 / (beta - b1))   for the hybrid's FIXED split
+
+The paper's point: the hybrid split b1 is fixed at design time while the
+actual a1/a2 ratio varies with receptive-field density, so the hybrid is
+load-imbalanced almost everywhere. We sweep REAL workloads: a1 = measured
+FA FLOPs of PPR subgraphs at several N (edge density varies), a2 = FT
+FLOPs, and report the latency ratio hybrid/unified — always >= 1.
+"""
+from __future__ import annotations
+
+import numpy as np
+
+from benchmarks.common import QUICK_SCALE, print_table, save_result
+from repro.core.subgraph import build_batch
+from repro.graphs.synthetic import get_graph
+
+F = 256
+
+
+def run(quick: bool = True):
+    g = get_graph("flickr", scale=QUICK_SCALE["flickr"])
+    rng = np.random.default_rng(0)
+    targets = rng.integers(0, g.num_vertices, size=8 if quick else 32)
+    rows = []
+    # hybrid split fixed for the N=128 average workload (best case for it)
+    sb0 = build_batch(g, targets, 128, num_threads=4)
+    e0 = float(sb0.n_edges.mean())
+    a1_design = 2.0 * e0 * F           # FA ~ edges
+    a2_design = 2.0 * 128 * F * F      # FT ~ N f^2
+    b1_frac = a1_design / (a1_design + a2_design)
+    for N in (64, 128, 256):
+        sb = build_batch(g, targets, N, num_threads=4)
+        edges = float(sb.n_edges.mean())
+        a1 = 2.0 * edges * F
+        a2 = 2.0 * N * F * F
+        unified = (a1 + a2)                       # / beta == 1
+        hybrid = max(a1 / b1_frac, a2 / (1 - b1_frac))
+        rows.append({
+            "N": N, "avg_edges": round(edges, 1),
+            "FA_share_%": round(100 * a1 / (a1 + a2), 1),
+            "hybrid_over_unified": round(hybrid / unified, 3),
+        })
+    print_table(rows, ["N", "avg_edges", "FA_share_%",
+                       "hybrid_over_unified"])
+    assert all(r["hybrid_over_unified"] >= 0.999 for r in rows)
+    payload = {"rows": rows, "hybrid_split_FA_frac": round(b1_frac, 4)}
+    save_result("eq1_loadbalance", payload)
+    return payload
+
+
+if __name__ == "__main__":
+    run(quick=False)

@@ -1,0 +1,82 @@
+"""Kernel-level benchmark: ACK kernels vs their pure-jnp oracles
+(correctness residual) + the modeled TPU-v5e roofline occupancy per kernel
+configuration from the DSE cost model (this container cannot measure TPU
+wall time; the dry-run HLO terms in EXPERIMENTS.md SRoofline are the
+authoritative perf numbers)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from benchmarks.common import print_table, save_result
+from repro.core.dse import TPUSpec
+from repro.kernels import ref
+from repro.kernels.fused_gnn import fused_gnn_layer
+from repro.kernels.gat_attention import gat_attention
+from repro.kernels.scatter_gather import scatter_gather_aggregate
+
+
+def _roofline(flops, hbm_bytes, spec=TPUSpec()):
+    t_c = flops / spec.peak_flops
+    t_m = hbm_bytes / spec.hbm_bw
+    return {"t_compute_us": round(t_c * 1e6, 3),
+            "t_memory_us": round(t_m * 1e6, 3),
+            "bound": "compute" if t_c >= t_m else "memory",
+            "intensity": round(flops / hbm_bytes, 1)}
+
+
+def run(quick: bool = True):
+    rows = []
+    key = jax.random.PRNGKey(0)
+    for (c, n, f_in, f_out) in [(8, 64, 512, 256), (8, 128, 512, 256),
+                                (8, 256, 512, 256)]:
+        ks = jax.random.split(key, 3)
+        h = jax.random.normal(ks[0], (c, n, f_in), jnp.float32)
+        adj = (jax.random.uniform(ks[1], (c, n, n)) < 0.2).astype(
+            jnp.float32)
+        w = jax.random.normal(ks[2], (f_in, f_out)) * 0.1
+        got = fused_gnn_layer(adj, h, w, None, None, None, interpret=True)
+        want = ref.fused_gnn_layer_ref(adj, h, w, None, None, None)
+        err = float(jnp.abs(got - want).max())
+        flops = c * (2 * n * f_in * f_out + 2 * n * n * f_out)
+        hbm = 4 * c * (n * f_in + n * n + n * f_out) + 4 * f_in * f_out
+        rows.append({"kernel": "fused_gnn", "cfg": f"C{c} N{n} f{f_in}",
+                     "max_err": f"{err:.1e}", **_roofline(flops, hbm)})
+    # scatter-gather
+    c, n, f, e = 8, 128, 256, 2048
+    ks = jax.random.split(key, 4)
+    src = jax.random.randint(ks[0], (c, e), 0, n).astype(jnp.int32)
+    dst = jax.random.randint(ks[1], (c, e), 0, n).astype(jnp.int32)
+    wts = jax.random.normal(ks[2], (c, e))
+    h = jax.random.normal(ks[3], (c, n, f))
+    got = scatter_gather_aggregate(src, dst, wts, h, interpret=True)
+    want = ref.scatter_gather_aggregate_ref(src, dst, wts, h)
+    err = float(jnp.abs(got - want).max())
+    flops = c * 4 * e * n * f            # one-hot routing matmuls
+    hbm = 4 * c * (n * f * 2 + 3 * e)
+    rows.append({"kernel": "scatter_gather", "cfg": f"C{c} N{n} E{e}",
+                 "max_err": f"{err:.1e}", **_roofline(flops, hbm)})
+    # gat attention
+    c, n, f, heads = 8, 128, 256, 4
+    z = jax.random.normal(ks[0], (c, n, f))
+    ss = jax.random.normal(ks[1], (c, n, heads))
+    sd = jax.random.normal(ks[2], (c, n, heads))
+    struct = (jax.random.uniform(ks[3], (c, n, n)) < 0.3).astype(
+        jnp.float32) + jnp.eye(n)[None]
+    got = gat_attention(z, ss, sd, struct, n_heads=heads, interpret=True)
+    want = ref.gat_attention_ref(z, ss, sd, struct, n_heads=heads)
+    err = float(jnp.abs(got - want).max())
+    flops = c * (2 * n * n * f + 8 * n * n * heads)
+    hbm = 4 * c * (2 * n * f + n * n)
+    rows.append({"kernel": "gat_attention", "cfg": f"C{c} N{n} h{heads}",
+                 "max_err": f"{err:.1e}", **_roofline(flops, hbm)})
+    print_table(rows, ["kernel", "cfg", "max_err", "t_compute_us",
+                       "t_memory_us", "bound", "intensity"])
+    payload = {"rows": rows}
+    save_result("kernels", payload)
+    return payload
+
+
+if __name__ == "__main__":
+    run(quick=False)

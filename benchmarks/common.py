@@ -1,0 +1,48 @@
+"""Shared benchmark utilities: timing, result persistence, dataset prep."""
+from __future__ import annotations
+
+import json
+import os
+import time
+from typing import Callable, Dict
+
+import numpy as np
+
+RESULTS_DIR = os.environ.get("REPRO_BENCH_DIR", "results/bench")
+
+# container-scale dataset knobs (full-scale graphs exceed 1-core CPU time
+# budgets; degree structure and feature dims are preserved)
+QUICK_SCALE = {"flickr": 0.02, "ogbn-arxiv": 0.01, "reddit": 0.004}
+FULL_SCALE = {"flickr": 0.2, "ogbn-arxiv": 0.1, "reddit": 0.02}
+
+
+def timeit(fn: Callable, *, warmup: int = 1, iters: int = 3) -> Dict:
+    for _ in range(warmup):
+        fn()
+    ts = []
+    for _ in range(iters):
+        t0 = time.perf_counter()
+        fn()
+        ts.append(time.perf_counter() - t0)
+    a = np.array(ts)
+    return {"mean_s": float(a.mean()), "min_s": float(a.min()),
+            "std_s": float(a.std()), "iters": iters}
+
+
+def save_result(name: str, payload: dict):
+    os.makedirs(RESULTS_DIR, exist_ok=True)
+    path = os.path.join(RESULTS_DIR, f"{name}.json")
+    with open(path, "w") as f:
+        json.dump(payload, f, indent=1, default=float)
+    return path
+
+
+def print_table(rows, cols):
+    widths = [max(len(str(r.get(c, ""))) for r in rows + [{c: c}])
+              for c in cols]
+    line = " | ".join(c.ljust(w) for c, w in zip(cols, widths))
+    print(line)
+    print("-+-".join("-" * w for w in widths))
+    for r in rows:
+        print(" | ".join(str(r.get(c, "")).ljust(w)
+                         for c, w in zip(cols, widths)))

@@ -1,0 +1,42 @@
+"""Train a reduced assigned-architecture LM end to end on CPU with the
+fault-tolerant loop: checkpoints, kill, resume — the 1000-node story at
+smoke scale.
+
+    PYTHONPATH=src python examples/lm_train_smoke.py \
+        [--arch deepseek-v2-lite-16b] [--steps 60]
+"""
+import argparse
+import shutil
+import tempfile
+
+from repro.ckpt import checkpoint as ckpt
+from repro.configs.registry import get_config
+from repro.train.loop import TrainJobConfig, train
+
+ap = argparse.ArgumentParser()
+ap.add_argument("--arch", default="deepseek-v2-lite-16b")
+ap.add_argument("--steps", type=int, default=60)
+args = ap.parse_args()
+
+cfg = get_config(args.arch, reduced=True)
+print(f"arch {cfg.name} (reduced: {cfg.n_layers}L d{cfg.d_model}); "
+      f"family={cfg.family}")
+ckpt_dir = tempfile.mkdtemp(prefix="repro_lm_")
+job = TrainJobConfig(steps=args.steps, ckpt_every=args.steps // 3,
+                     ckpt_dir=ckpt_dir, seq_len=64, global_batch=4)
+
+print("phase 1: train until an injected failure ...")
+try:
+    train(cfg, job, fail_at_step=args.steps // 2)
+except RuntimeError as e:
+    print(f"  {e}")
+print(f"  committed checkpoints: {ckpt.committed_steps(ckpt_dir)}")
+
+print("phase 2: restart — resumes from the latest checkpoint ...")
+_, _, hist = train(cfg, job)
+print(f"  resumed at step {hist[0]['step']}, "
+      f"finished at step {hist[-1]['step']}")
+print(f"  loss: start {hist[0]['loss']:.3f} -> end {hist[-1]['loss']:.3f}")
+assert hist[-1]["loss"] < hist[0]["loss"] + 0.5
+shutil.rmtree(ckpt_dir, ignore_errors=True)
+print("done: loss continued across the restart (deterministic pipeline)")

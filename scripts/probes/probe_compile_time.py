@@ -1,0 +1,62 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+import time
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.configs.registry import get_config
+from repro.configs.base import SHAPES
+from repro.launch.mesh import make_production_mesh
+from repro.launch.specs import specs_for
+from repro.models.transformer import init_params
+from repro.train.optim import AdamWConfig, init_opt
+from repro.train.step import make_train_step
+from repro.distributed.sharding import (activation_rules, batch_spec,
+                                        param_pspecs, zero1_pspecs, named)
+from repro.models.common import logical_axis_rules
+
+t0 = time.time()
+mesh = make_production_mesh()
+print(f"mesh {mesh.shape} in {time.time()-t0:.1f}s", flush=True)
+
+for arch in ["deepseek-7b", "deepseek-v3-671b"]:
+    cfg = get_config(arch)
+    shape = SHAPES["train_4k"]
+    t0 = time.time()
+    params_shapes = jax.eval_shape(
+        lambda: init_params(cfg, jax.random.PRNGKey(0), max_seq=shape.seq_len))
+    print(f"{arch} eval_shape {time.time()-t0:.1f}s", flush=True)
+    pspecs = param_pspecs(cfg, params_shapes)
+    opt_cfg = AdamWConfig(moment_dtype=cfg.dtype.opt_dtype)
+    opt_shapes = jax.eval_shape(lambda: init_opt(params_shapes, opt_cfg))
+    mspec = zero1_pspecs(pspecs, params_shapes, mesh)
+    opt_pspecs = type(opt_shapes)(step=P(), m=mspec, v=mspec)
+    bspec = batch_spec(shape.global_batch, mesh)
+    batch = specs_for(cfg, shape)
+    batch_specs = {k: bspec if hasattr(v, "ndim") and v.ndim >= 2 else P()
+                   for k, v in batch.items()}
+    rules = activation_rules(cfg, mesh)
+
+    def step_fn(p, o, b):
+        with logical_axis_rules(rules):
+            return make_train_step(cfg, opt_cfg)(p, o, b)
+
+    t0 = time.time()
+    with mesh:
+        jf = jax.jit(step_fn,
+                     in_shardings=(named(pspecs, mesh), named(opt_pspecs, mesh),
+                                   named(batch_specs, mesh)),
+                     out_shardings=(named(pspecs, mesh), named(opt_pspecs, mesh),
+                                    None))
+        lowered = jf.lower(params_shapes, opt_shapes, batch)
+        print(f"{arch} lower {time.time()-t0:.1f}s", flush=True)
+        t0 = time.time()
+        compiled = lowered.compile()
+        print(f"{arch} compile {time.time()-t0:.1f}s", flush=True)
+        ma = compiled.memory_analysis()
+        print(f"{arch} argbytes/dev={ma.argument_size_in_bytes/2**30:.2f}GiB "
+              f"temp={ma.temp_size_in_bytes/2**30:.2f}GiB", flush=True)
+        ca = compiled.cost_analysis()
+        print(f"{arch} flops={ca.get('flops', 0):.3e}", flush=True)

@@ -1,0 +1,71 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=64"
+import jax, jax.numpy as jnp
+from jax.sharding import PartitionSpec as P, NamedSharding
+
+print("devices:", len(jax.devices()))
+mesh = jax.make_mesh((4, 16), ("data", "model"))
+
+# 1) scan FLOPs accounting: y = x @ w applied L times via scan
+L, D = 8, 256
+w = jax.ShapeDtypeStruct((L, D, D), jnp.float32)
+x = jax.ShapeDtypeStruct((32, D), jnp.float32)
+
+def f(w, x):
+    def body(h, wl):
+        return h @ wl, None
+    h, _ = jax.lax.scan(body, x, w)
+    return h
+
+lowered = jax.jit(f).lower(w, x)
+c = lowered.compile()
+ca = c.cost_analysis()
+print("cost keys sample:", {k: v for k, v in list(ca.items())[:8]})
+analytic = 2 * L * 32 * D * D
+print("flops reported:", ca.get("flops"), "analytic:", analytic,
+      "ratio:", ca.get("flops", 0) / analytic)
+ma = c.memory_analysis()
+print("memory_analysis:", ma)
+
+# 2) uneven sharding of dim 20 over 16
+def g(a):
+    return jax.lax.with_sharding_constraint(
+        a, NamedSharding(mesh, P(None, "model"))) * 2.0
+a = jax.ShapeDtypeStruct((8, 20), jnp.float32)
+try:
+    cc = jax.jit(g).lower(a).compile()
+    print("uneven OK")
+except Exception as e:
+    print("uneven FAIL:", e)
+
+# 3) sharded matmul -> collectives in HLO text
+def h_fn(x, w):
+    y = x @ w
+    return jax.lax.with_sharding_constraint(y, NamedSharding(mesh, P("data", None)))
+xs = jax.ShapeDtypeStruct((64, 256), jnp.float32)
+ws = jax.ShapeDtypeStruct((256, 512), jnp.float32)
+jf = jax.jit(h_fn, in_shardings=(NamedSharding(mesh, P("data", "model")),
+                                 NamedSharding(mesh, P("model", None))))
+low = jf.lower(xs, ws)
+txt = low.compile().as_text()
+colls = [l.split("=")[1].split("(")[0].strip() for l in txt.splitlines()
+         if any(op in l for op in ("all-reduce", "all-gather", "reduce-scatter", "all-to-all", "collective-permute")) and "=" in l]
+print("collectives:", colls[:10])
+# check while-body collectives visibility
+def f2(w, x):
+    def body(h, wl):
+        h = h @ wl
+        return jax.lax.with_sharding_constraint(h, NamedSharding(mesh, P("data", None))), None
+    h, _ = jax.lax.scan(body, x, w)
+    return h
+jf2 = jax.jit(f2, in_shardings=(NamedSharding(mesh, P(None, None, "model")),
+                                NamedSharding(mesh, P("data", "model"))))
+low2 = jf2.lower(jax.ShapeDtypeStruct((L, 256, 256), jnp.float32),
+                 jax.ShapeDtypeStruct((64, 256), jnp.float32))
+c2 = low2.compile()
+txt2 = c2.as_text()
+n_coll = sum(1 for l in txt2.splitlines() if "all-reduce" in l and "=" in l)
+print("while-body all-reduce lines:", n_coll)
+print("has while:", "while(" in txt2 or " while " in txt2)
+ca2 = c2.cost_analysis()
+print("scan sharded flops:", ca2.get("flops"), "analytic global:", 2*L*64*256*256)

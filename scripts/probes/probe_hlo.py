@@ -1,0 +1,28 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=64"
+import jax, jax.numpy as jnp
+from jax.sharding import PartitionSpec as P, NamedSharding
+
+mesh = jax.make_mesh((4, 16), ("data", "model"),
+                     axis_types=(jax.sharding.AxisType.Auto,) * 2)
+L = 8
+
+def f2(w, x):
+    def body(h, wl):
+        h = h @ wl
+        h = jax.lax.with_sharding_constraint(h, NamedSharding(mesh, P("data", None)))
+        return h, None
+    h, _ = jax.lax.scan(body, x, w)
+    return h
+
+jf2 = jax.jit(f2, in_shardings=(NamedSharding(mesh, P(None, None, "model")),
+                                NamedSharding(mesh, P("data", "model"))))
+low2 = jf2.lower(jax.ShapeDtypeStruct((L, 256, 256), jnp.float32),
+                 jax.ShapeDtypeStruct((64, 256), jnp.float32))
+c2 = low2.compile()
+txt2 = c2.as_text()
+print(txt2[:4000])
+print("......")
+for line in txt2.splitlines():
+    if any(s in line for s in ("while", "all-", "collective", "dot(", "= dot")):
+        print(line.strip()[:220])

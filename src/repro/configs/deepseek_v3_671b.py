@@ -1,0 +1,6 @@
+"""Arch config: deepseek-v3-671b (see registry for the exact published numbers)."""
+from repro.configs.registry import get_config
+
+ARCH = "deepseek-v3-671b"
+CONFIG = get_config(ARCH)
+REDUCED = get_config(ARCH, reduced=True)

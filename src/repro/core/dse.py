@@ -1,0 +1,129 @@
+"""Design Space Exploration (paper §4.5) adapted to TPU.
+
+The paper's DSE picks, from a DSP budget, (1) N_ALU per ALU, (2) the ACK
+array size p_sys, (3) the PE count N_pe — one bitstream for a SET of GNN
+models. The TPU analogue picks, from the device spec, the kernel tiling and
+batching for ONE compiled kernel family serving every model in the set:
+
+  Step 1 (N_ALU): verify the ALU op set — every aggregate()/update()/
+          attention op of every model must map to MXU/VPU primitives.
+  Step 2 (p_sys): maximize the fused-kernel feature block BF (multiple of
+          the 128-lane MXU width) subject to the worst-case VMEM working
+          set over all models, double-buffered.
+  Step 3 (N_pe): choose the per-core subgraph tile C_core from the modeled
+          per-target latency so a batch of C saturates the chip; across
+          chips targets are data-parallel (mesh 'data'/'pod' axes).
+
+Outputs one ``DSEPlan``; ``modeled_utilization`` reports the roofline-style
+compute fraction per model under that single plan (Eq. 1's load-balance
+argument: ACK gives every kernel the whole chip).
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import Dict, List, Sequence
+
+from repro.gnn.model import GNNConfig
+
+MXU_LANE = 128
+
+# ops required per model kind -> all supported by MXU (matmul) + VPU
+# (elementwise max/exp/add/mul) — the "N_ALU" feasibility check.
+KIND_OPS = {
+    "gcn": {"matmul", "add", "relu"},
+    "sage": {"matmul", "add", "relu"},
+    "gin": {"matmul", "add", "relu", "mul"},
+    "gat": {"matmul", "add", "exp", "max", "mul", "leaky_relu"},
+}
+TPU_OPS = {"matmul", "add", "relu", "mul", "exp", "max", "leaky_relu",
+           "min", "sub", "div"}
+
+
+@dataclass(frozen=True)
+class TPUSpec:
+    name: str = "tpu-v5e"
+    peak_flops: float = 197e12          # bf16
+    hbm_bw: float = 819e9               # bytes/s
+    vmem_bytes: int = 16 * 2 ** 20      # per-core VMEM budget for the plan
+    hbm_bytes: int = 16 * 2 ** 30
+    ici_bw: float = 50e9                # per link
+    mxu: int = MXU_LANE
+
+
+@dataclass
+class DSEPlan:
+    block_f: int                        # p_sys analogue (MXU tile width)
+    c_core: int                         # N_pe analogue (subgraphs/core)
+    edge_block: int
+    buffer_depth: int                   # double/triple buffering depth
+    vmem_used: int
+    ops_ok: bool
+    per_model: Dict[str, dict] = field(default_factory=dict)
+
+
+def _vmem_layer(n: int, f_in: int, bf: int, depth: int = 2) -> int:
+    """Working set of one fused-kernel grid step (fp32 bytes), times the
+    pipeline buffering depth for the streamed operands."""
+    a = n * n * 4
+    h = n * f_in * 4
+    w = f_in * bf * 4 * 2          # w_neigh + w_self
+    acc = n * bf * 4 * 2           # accumulator + out block
+    return depth * (a + h + w) + acc
+
+
+def layer_costs(cfg: GNNConfig, n: int, f_in: int, f_out: int,
+                spec: TPUSpec) -> dict:
+    """Per-layer dense-mode compute/memory model for one subgraph."""
+    flops = 2.0 * n * n * f_out + 2.0 * n * f_in * f_out
+    if cfg.kind == "sage":
+        flops += 2.0 * n * f_in * f_out
+    if cfg.kind == "gat":
+        flops += 2.0 * n * n * cfg.n_heads + 6.0 * n * n * cfg.n_heads
+    # HBM traffic: H in/out + A once; weights amortized over C subgraphs
+    bytes_hbm = 4.0 * (n * f_in + n * f_out + n * n)
+    return {"flops": flops, "bytes": bytes_hbm,
+            "t_compute": flops / spec.peak_flops,
+            "t_memory": bytes_hbm / spec.hbm_bw}
+
+
+def explore(models: Sequence[GNNConfig], spec: TPUSpec = TPUSpec(),
+            buffer_depth: int = 2) -> DSEPlan:
+    # Step 1 — op coverage
+    ops_ok = all(KIND_OPS[m.kind] <= TPU_OPS for m in models)
+    n_max = max(m.receptive_field for m in models)
+    f_max = max(max(m.f_in, m.f_hidden) for m in models)
+    f_pad = f_max + (-f_max) % MXU_LANE
+
+    # Step 2 — maximize BF (power-of-two multiple of 128, paper: p_sys=2^k)
+    bf = MXU_LANE
+    while (_vmem_layer(n_max, f_pad, bf * 2, buffer_depth)
+           <= spec.vmem_bytes and bf * 2 <= f_pad):
+        bf *= 2
+
+    # Step 3 — per-core subgraph tile: enough grid steps to amortize weight
+    # streaming; modeled so device time per batch >= 2x weight-load time.
+    per_model = {}
+    c_core = 8
+    for m in models:
+        n = m.receptive_field
+        costs = [layer_costs(m, n, m.f_in, m.f_hidden, spec)] + \
+            [layer_costs(m, n, m.f_hidden, m.f_hidden, spec)] * \
+            (m.n_layers - 1)
+        t_comp = sum(c["t_compute"] for c in costs)
+        t_mem = sum(c["t_memory"] for c in costs)
+        w_bytes = 4.0 * (m.f_in * m.f_hidden
+                         + (m.n_layers - 1) * m.f_hidden * m.f_hidden)
+        t_weights = w_bytes / spec.hbm_bw
+        # subgraphs per core so that compute hides one full weight sweep
+        need = max(1, int(2 * t_weights / max(t_comp, 1e-12)))
+        c_core = max(c_core, min(256, need))
+        util = t_comp / max(t_comp, t_mem + t_weights / max(need, 1))
+        per_model[m.display] = {
+            "t_compute_per_target": t_comp, "t_memory_per_target": t_mem,
+            "modeled_util": round(util, 3),
+            "bound": "compute" if t_comp >= t_mem else "memory",
+        }
+    vm = _vmem_layer(n_max, f_pad, bf, buffer_depth)
+    return DSEPlan(block_f=bf, c_core=c_core, edge_block=256,
+                   buffer_depth=buffer_depth, vmem_used=vm, ops_ok=ops_ok,
+                   per_model=per_model)

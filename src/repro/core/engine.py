@@ -1,0 +1,205 @@
+"""Decoupled mini-batch GNN inference engine (paper Algorithm 2 + 3).
+
+Host side: INI (PPR local push) + induced-subgraph construction into
+fixed-shape padded batches. Device side: one jitted program per
+(model, N, C) executing L layers through the ACK (dense or scatter-gather
+mode; XLA or Pallas implementation) and the Readout. The fixed shapes are
+the decoupling dividend: ONE compiled program serves every batch — the
+paper's "single accelerator, no reconfiguration" property.
+
+``DecoupledEngine.infer`` overlaps host preparation of batch i+1 with
+device execution of batch i via core.scheduler (paper Fig. 7).
+"""
+from __future__ import annotations
+
+import functools
+from dataclasses import dataclass
+from typing import Dict, List, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.ack import AckDecision, choose_mode
+from repro.core.scheduler import PipelineScheduler, SchedulerStats
+from repro.core.subgraph import SubgraphBatch, build_batch, default_edge_pad
+from repro.gnn.layers import readout
+from repro.gnn.model import GNNConfig, gnn_forward, init_gnn
+from repro.graphs.csr import CSRGraph
+from repro.kernels import ops
+
+
+def _pad128(f: int) -> int:
+    return f + (-f) % 128
+
+
+def _pallas_layer(cfg: GNNConfig, kind_first: bool):
+    """Build an inner-layer apply using the Pallas ACK kernels."""
+
+    def apply(p, h, batch):
+        adj, adj_mean, mask = batch["adj"], batch["adj_mean"], batch["mask"]
+        if cfg.kind == "gcn":
+            return ops.fused_gnn_layer(adj, h, p["w"], None, p["b"], mask,
+                                       act="relu")
+        if cfg.kind == "sage":
+            return ops.fused_gnn_layer(adj_mean, h, p["w_neigh"],
+                                       p["w_self"], p["b"], mask,
+                                       act="relu")
+        if cfg.kind == "gin":
+            n = h.shape[1]
+            a_gin = jnp.sign(adj_mean) + \
+                (1.0 + p["eps"]) * jnp.eye(n, dtype=h.dtype)
+            hid = ops.fused_gnn_layer(a_gin, h, p["w1"], None, p["b1"],
+                                      mask, act="relu")
+            return ops.fused_gnn_layer(adj, hid, None, p["w2"], p["b2"],
+                                       mask, act="relu")
+        if cfg.kind == "gat":
+            nh = cfg.n_heads
+            z = ops.fused_gnn_layer(adj, h, None, p["w"], None, mask,
+                                    act="none")
+            s_src = jnp.einsum("cnhf,hf->cnh",
+                               z.reshape(*z.shape[:2], nh, -1), p["a_src"])
+            s_dst = jnp.einsum("cnhf,hf->cnh",
+                               z.reshape(*z.shape[:2], nh, -1), p["a_dst"])
+            n = h.shape[1]
+            struct = (jnp.sign(adj_mean) + jnp.eye(n, dtype=h.dtype)) \
+                * mask[:, None, :]
+            out = ops.gat_attention(z, s_src, s_dst, struct, n_heads=nh)
+            return jax.nn.elu(out + p["b"]) * mask[..., None]
+        raise ValueError(cfg.kind)
+
+    return apply
+
+
+@dataclass
+class InferenceResult:
+    embeddings: np.ndarray           # [num_targets, f]
+    stats: Optional[SchedulerStats]
+    decision: AckDecision
+
+
+class DecoupledEngine:
+    """One engine instance = one (graph, model, batch-size) deployment."""
+
+    def __init__(self, graph: CSRGraph, cfg: GNNConfig, params=None, *,
+                 batch_size: int = 64, mode: str = "auto",
+                 impl: str = "xla", num_threads: int = 8, seed: int = 0,
+                 e_pad: Optional[int] = None, dedup_features: bool = False):
+        self.graph, self.cfg = graph, cfg
+        self.batch_size = batch_size
+        self.num_threads = num_threads
+        self.impl = impl
+        self.dedup_features = dedup_features
+        self.last_dedup_ratio = None
+        n = cfg.receptive_field
+        self.e_pad = e_pad or default_edge_pad(graph, n)
+        avg_edges = min(self.e_pad, n * float(graph.degrees.mean()))
+        self.decision = choose_mode(n, avg_edges, cfg.f_hidden,
+                                    None if mode == "auto" else mode)
+        self.mode = self.decision.mode
+        if params is None:
+            params = init_gnn(cfg, jax.random.PRNGKey(seed))
+        self.params = params
+        self.f_pad = _pad128(cfg.f_in) if impl == "pallas" else cfg.f_in
+        if self.f_pad != cfg.f_in:
+            # MXU alignment: zero-pad layer0 input-rows to match the padded
+            # feature columns (padded features are zero, so this is exact)
+            pad = self.f_pad - cfg.f_in
+            l0 = dict(params["layer0"])
+            for k in ("w", "w_self", "w_neigh", "w1"):
+                if k in l0:
+                    l0[k] = jnp.pad(l0[k], ((0, pad), (0, 0)))
+            self.params = dict(params, layer0=l0)
+        self._infer = jax.jit(functools.partial(self._forward))
+
+    # -- device program ----------------------------------------------------
+    def _forward(self, params, batch: Dict[str, jax.Array]):
+        cfg = self.cfg
+        if self.impl == "pallas" and self.mode == "dense":
+            apply = _pallas_layer(cfg, kind_first=True)
+            h = apply(params["layer0"], batch["feats"], batch)
+            if cfg.n_layers > 1:
+                def body(hh, lp):
+                    return apply(lp, hh, batch), None
+                h, _ = jax.lax.scan(body, h, params["layers"])
+            emb = readout(h, batch["mask"], cfg.readout)
+            if cfg.num_classes:
+                emb = emb @ params["cls_w"] + params["cls_b"]
+            return emb
+        emb, _ = gnn_forward(cfg, params, batch, mode=self.mode)
+        return emb
+
+    # -- host side ----------------------------------------------------------
+    def prepare(self, targets) -> Dict[str, np.ndarray]:
+        from repro.core.ini import ini_batch
+        from repro.core.subgraph import (batch_from_node_lists,
+                                         packed_features)
+        node_lists = ini_batch(self.graph, targets,
+                               self.cfg.receptive_field,
+                               self.cfg.ppr_alpha, self.cfg.ppr_eps,
+                               self.num_threads)
+        sb = batch_from_node_lists(self.graph, targets, node_lists,
+                                   self.cfg.receptive_field, self.e_pad)
+        d = self.device_batch(sb)
+        if self.dedup_features:
+            uniq, idx, ratio = packed_features(
+                node_lists, self.graph, self.cfg.receptive_field)
+            self.last_dedup_ratio = ratio
+            del d["feats"]               # ship packed form instead
+            d["uniq_feats"], d["feat_idx"] = uniq, idx
+        return d
+
+    def device_batch(self, sb: SubgraphBatch) -> Dict[str, np.ndarray]:
+        d = dict(feats=sb.feats, adj=sb.adj, adj_mean=sb.adj_mean,
+                 mask=sb.mask)
+        if self.f_pad != self.cfg.f_in:
+            d["feats"] = np.pad(sb.feats,
+                                ((0, 0), (0, 0),
+                                 (0, self.f_pad - self.cfg.f_in)))
+        if self.mode == "sg":
+            n = sb.n
+            self_w = sb.adj[:, np.arange(n), np.arange(n)]
+            indeg = np.einsum("cij->ci", (sb.adj_mean > 0).astype(np.float32))
+            d.update(edge_src=sb.edge_src, edge_dst=sb.edge_dst,
+                     edge_w=sb.edge_w, self_w=self_w.astype(np.float32))
+            valid = sb.edge_w != 0
+            dst_deg = np.take_along_axis(
+                np.maximum(indeg, 1.0), sb.edge_dst.astype(np.int64), axis=1)
+            d["edge_w_mean"] = np.where(valid, 1.0 / dst_deg, 0.0
+                                        ).astype(np.float32)
+        return d
+
+    def run_device(self, device_batch) -> jax.Array:
+        if "uniq_feats" in device_batch:
+            device_batch = dict(device_batch)
+            uniq = jnp.asarray(device_batch.pop("uniq_feats"))
+            idx = jnp.asarray(device_batch.pop("feat_idx"))
+            feats = jnp.take(uniq, idx, axis=0)      # device-side gather
+            if self.f_pad != self.cfg.f_in:
+                feats = jnp.pad(feats, ((0, 0), (0, 0),
+                                        (0, self.f_pad - self.cfg.f_in)))
+            device_batch["feats"] = feats
+        if self.f_pad != self.cfg.f_in and self.cfg.f_in == \
+                device_batch["feats"].shape[-1]:
+            device_batch = dict(device_batch)
+            device_batch["feats"] = np.pad(
+                device_batch["feats"],
+                ((0, 0), (0, 0), (0, self.f_pad - self.cfg.f_in)))
+        return self._infer(self.params, device_batch)
+
+    # -- end-to-end ----------------------------------------------------------
+    def infer(self, targets, overlap: bool = True) -> InferenceResult:
+        """Mini-batch inference for arbitrary #targets (chunks of C)."""
+        targets = np.asarray(targets)
+        C = self.batch_size
+        chunks = [targets[i:i + C] for i in range(0, len(targets), C)]
+        if len(chunks) and len(chunks[-1]) < C:     # pad last chunk
+            last = chunks[-1]
+            chunks[-1] = np.concatenate(
+                [last, np.repeat(last[-1:], C - len(last))])
+        sched = PipelineScheduler(self.prepare, self.run_device,
+                                  depth=3 if overlap else 1)
+        outs, stats = sched.run(chunks, overlap=overlap)
+        emb = np.concatenate([np.asarray(o) for o in outs], axis=0)
+        return InferenceResult(embeddings=emb[:len(targets)], stats=stats,
+                               decision=self.decision)

@@ -1,0 +1,116 @@
+"""Decoupled GNN model assembly (paper §2.3 "Specification of Decoupled
+model"): (1) L layers, (2) receptive-field size N, (3) the PPR sampling
+algorithm (core.ini), (4) aggregate(), (5) hidden dims f_l, (6) update()
+weights — plus the Readout().
+
+Hidden dims follow the paper's evaluation: f_l = 256 for all layers, so the
+L-1 inner layers are homogeneous and run under one ``lax.scan`` over stacked
+weights (bounded HLO at L=16). The first layer maps f_in -> f_hidden.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.gnn.layers import (LAYER_APPLY, LAYER_INITS, gat_layer,
+                              init_gat_layer, readout)
+from repro.models.common import dense_init, split_keys
+
+
+@dataclass(frozen=True)
+class GNNConfig:
+    kind: str                    # gcn | sage | gin | gat
+    n_layers: int = 3            # L
+    receptive_field: int = 128   # N
+    f_in: int = 500
+    f_hidden: int = 256          # paper: 256 for every layer
+    n_heads: int = 4             # gat only (f_hidden % n_heads == 0)
+    num_classes: int = 0         # 0 = emit embeddings only
+    readout: str = "max"
+    ppr_alpha: float = 0.15
+    ppr_eps: float = 1e-4
+    name: str = ""
+
+    @property
+    def display(self) -> str:
+        return self.name or f"{self.kind}-L{self.n_layers}-N{self.receptive_field}"
+
+
+def _init_layer(cfg: GNNConfig, key, f_in, f_out):
+    if cfg.kind == "gat":
+        return init_gat_layer(key, f_in, f_out, cfg.n_heads)
+    return LAYER_INITS[cfg.kind](key, f_in, f_out)
+
+
+def init_gnn(cfg: GNNConfig, key):
+    ks = split_keys(key, 4)
+    p = {"layer0": _init_layer(cfg, ks[0], cfg.f_in, cfg.f_hidden)}
+    if cfg.n_layers > 1:
+        p["layers"] = jax.vmap(
+            lambda k: _init_layer(cfg, k, cfg.f_hidden, cfg.f_hidden)
+        )(jax.random.split(ks[1], cfg.n_layers - 1))
+    if cfg.num_classes:
+        p["cls_w"] = dense_init(ks[2], (cfg.f_hidden, cfg.num_classes))
+        p["cls_b"] = jnp.zeros((cfg.num_classes,))
+    return p
+
+
+def _apply_layer(cfg: GNNConfig, p, h, batch, mode):
+    if cfg.kind == "gat":
+        return gat_layer(p, h, batch, mode)
+    return LAYER_APPLY[cfg.kind](p, h, batch, mode)
+
+
+def gnn_forward(cfg: GNNConfig, params, batch, mode: str = "dense",
+                layer_fn=None):
+    """batch: device dict (see SubgraphBatch.device_arrays + derived keys).
+    Returns (embeddings [C, f_hidden or num_classes], final h [C,N,f]).
+
+    ``layer_fn`` optionally overrides the inner-layer apply (the engine
+    injects the Pallas ACK kernels here; default is the pure-jnp path)."""
+    apply = layer_fn or (lambda p, h: _apply_layer(cfg, p, h, batch, mode))
+    h = apply(params["layer0"], batch["feats"])
+    if cfg.n_layers > 1:
+        def body(hh, lp):
+            return apply(lp, hh), None
+        h, _ = jax.lax.scan(body, h, params["layers"])
+    emb = readout(h, batch["mask"], cfg.readout)
+    if cfg.num_classes:
+        emb = emb @ params["cls_w"] + params["cls_b"]
+    return emb, h
+
+
+def sg_extras(batch_np, adj, edge_src, edge_dst):
+    """Derived arrays the sg mode needs beyond SubgraphBatch.device_arrays:
+    per-vertex self-loop weights and row-mean edge weights."""
+    import numpy as np
+    C, N, _ = adj.shape
+    self_w = adj[:, np.arange(N), np.arange(N)]
+    # mean-normalized edge weights for SAGE: 1/indeg(dst)
+    indeg = np.zeros((C, N), np.float32)
+    valid = batch_np.edge_w != 0
+    for c in range(C):
+        np.add.at(indeg[c], edge_dst[c][valid[c]], 1.0)
+    ew_mean = np.where(valid,
+                       1.0 / np.maximum(indeg[np.arange(C)[:, None],
+                                              edge_dst], 1.0),
+                       0.0).astype(np.float32)
+    return self_w.astype(np.float32), ew_mean
+
+
+# the paper's evaluated sweep (§5.2): 3 models x L in {3,5,8,16} x
+# N in {64,128,256}, hidden 256
+PAPER_MODELS = ("gcn", "sage", "gat")
+PAPER_LAYERS = (3, 5, 8, 16)
+PAPER_N = (64, 128, 256)
+
+
+def paper_model_grid(f_in: int = 500, num_classes: int = 0):
+    for kind in PAPER_MODELS:
+        for L in PAPER_LAYERS:
+            for N in PAPER_N:
+                yield GNNConfig(kind=kind, n_layers=L, receptive_field=N,
+                                f_in=f_in, num_classes=num_classes)

@@ -1,0 +1,113 @@
+"""CSR graph store (numpy, host-side — the paper keeps the graph in host
+memory and only ships per-target induced subgraphs to the accelerator).
+
+The store is directed CSR over out-edges; GNN datasets are symmetrized at
+construction. Features live alongside as a dense [V, f] float32 matrix.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import Optional
+
+import numpy as np
+
+
+@dataclass
+class CSRGraph:
+    indptr: np.ndarray            # [V+1] int64
+    indices: np.ndarray           # [E] int32
+    features: np.ndarray          # [V, f] float32
+    labels: Optional[np.ndarray] = None   # [V] int32
+    name: str = "graph"
+
+    @property
+    def num_vertices(self) -> int:
+        return len(self.indptr) - 1
+
+    @property
+    def num_edges(self) -> int:
+        return int(self.indices.shape[0])
+
+    @property
+    def feature_dim(self) -> int:
+        return int(self.features.shape[1])
+
+    @property
+    def degrees(self) -> np.ndarray:
+        return np.diff(self.indptr)
+
+    def neighbors(self, v: int) -> np.ndarray:
+        return self.indices[self.indptr[v]:self.indptr[v + 1]]
+
+    def validate(self):
+        assert self.indptr[0] == 0 and self.indptr[-1] == self.num_edges
+        assert np.all(np.diff(self.indptr) >= 0)
+        if self.num_edges:
+            assert self.indices.min() >= 0
+            assert self.indices.max() < self.num_vertices
+        assert self.features.shape[0] == self.num_vertices
+        return self
+
+
+def from_edge_list(src: np.ndarray, dst: np.ndarray, num_vertices: int,
+                   features: np.ndarray, symmetrize: bool = True,
+                   labels=None, name: str = "graph") -> CSRGraph:
+    """Build CSR from (src, dst) arrays; dedups; optionally symmetrizes."""
+    if symmetrize:
+        src, dst = (np.concatenate([src, dst]), np.concatenate([dst, src]))
+    # drop self loops (GNN layers add their own normalized self terms)
+    keep = src != dst
+    src, dst = src[keep], dst[keep]
+    # dedup via sort on (src, dst)
+    order = np.lexsort((dst, src))
+    src, dst = src[order], dst[order]
+    if len(src):
+        uniq = np.concatenate([[True], (np.diff(src) != 0)
+                               | (np.diff(dst) != 0)])
+        src, dst = src[uniq], dst[uniq]
+    counts = np.bincount(src, minlength=num_vertices)
+    indptr = np.zeros(num_vertices + 1, np.int64)
+    np.cumsum(counts, out=indptr[1:])
+    return CSRGraph(indptr=indptr, indices=dst.astype(np.int32),
+                    features=features, labels=labels, name=name).validate()
+
+
+def subgraph_edges(g: CSRGraph, nodes: np.ndarray):
+    """Induced-subgraph edge list in *local* indices.
+
+    nodes: [n] unique global vertex ids; local id = position in ``nodes``.
+    Returns (src_local [e], dst_local [e]) int32.
+    """
+    n = len(nodes)
+    local = {}
+    # vectorized mapping: global -> local via searchsorted on sorted nodes
+    order = np.argsort(nodes)
+    sorted_nodes = nodes[order]
+    starts = g.indptr[nodes]
+    ends = g.indptr[nodes + 1]
+    counts = (ends - starts).astype(np.int64)
+    total = int(counts.sum())
+    if total == 0:
+        return (np.zeros(0, np.int32), np.zeros(0, np.int32))
+    # gather all out-edges of `nodes`
+    src_rep = np.repeat(np.arange(n, dtype=np.int32), counts)
+    idx = np.concatenate([g.indices[s:e] for s, e in zip(starts, ends)]) \
+        if n < 4096 else _gather_ranges(g.indices, starts, ends, total)
+    # keep edges whose head is inside the node set
+    pos = np.searchsorted(sorted_nodes, idx)
+    pos = np.clip(pos, 0, n - 1)
+    inside = sorted_nodes[pos] == idx
+    dst_local = order[pos[inside]].astype(np.int32)
+    src_local = src_rep[inside]
+    del local
+    return src_local, dst_local
+
+
+def _gather_ranges(arr, starts, ends, total):
+    out = np.empty(total, arr.dtype)
+    o = 0
+    for s, e in zip(starts, ends):
+        ln = e - s
+        out[o:o + ln] = arr[s:e]
+        o += ln
+    return out

@@ -1,0 +1,39 @@
+"""Jit'd kernel entry points with automatic backend dispatch.
+
+On TPU the Pallas kernels run compiled; on CPU (this container) they run in
+``interpret=True`` mode for correctness, and callers that want production
+CPU speed use the XLA reference path instead (``impl='xla'``). The engine's
+ACK dispatcher (core.ack) selects between dense/sg the way the paper's mode
+mux does.
+"""
+from __future__ import annotations
+
+import jax
+
+from repro.kernels import ref
+from repro.kernels.fused_gnn import fused_gnn_layer as _fused_pallas
+from repro.kernels.gat_attention import gat_attention as _gat_pallas
+from repro.kernels.scatter_gather import \
+    scatter_gather_aggregate as _sg_pallas
+
+
+def _interpret() -> bool:
+    return jax.default_backend() != "tpu"
+
+
+def fused_gnn_layer(*args, impl: str = "pallas", **kw):
+    if impl == "xla":
+        return ref.fused_gnn_layer_ref(*args, **kw)
+    return _fused_pallas(*args, interpret=_interpret(), **kw)
+
+
+def scatter_gather_aggregate(*args, impl: str = "pallas", **kw):
+    if impl == "xla":
+        return ref.scatter_gather_aggregate_ref(*args, **kw)
+    return _sg_pallas(*args, interpret=_interpret(), **kw)
+
+
+def gat_attention(*args, impl: str = "pallas", **kw):
+    if impl == "xla":
+        return ref.gat_attention_ref(*args, **kw)
+    return _gat_pallas(*args, interpret=_interpret(), **kw)

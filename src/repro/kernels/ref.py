@@ -1,0 +1,58 @@
+"""Pure-jnp oracles for every Pallas kernel (the ``assert_allclose``
+references for the shape/dtype sweeps in tests/test_kernels.py)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+NEG_INF = -1e30
+
+ACTS = {"none": lambda x: x, "relu": jax.nn.relu, "elu": jax.nn.elu}
+
+
+def fused_gnn_layer_ref(adj, h, w_neigh, w_self=None, b=None, mask=None, *,
+                        act="relu", **_):
+    C, N, Fin = h.shape
+    w_any = w_neigh if w_neigh is not None else w_self
+    Fout = w_any.shape[1]
+    acc = jnp.zeros((C, N, Fout), jnp.float32)
+    if w_neigh is not None:
+        z = jnp.einsum("cij,cjf->cif", adj.astype(jnp.float32),
+                       h.astype(jnp.float32))
+        acc += jnp.einsum("cnf,fg->cng", z, w_neigh.astype(jnp.float32))
+    if w_self is not None:
+        acc += jnp.einsum("cnf,fg->cng", h.astype(jnp.float32),
+                          w_self.astype(jnp.float32))
+    if b is not None:
+        acc += b.astype(jnp.float32)
+    out = ACTS[act](acc)
+    if mask is not None:
+        out = out * mask[..., None].astype(jnp.float32)
+    return out.astype(h.dtype)
+
+
+def scatter_gather_aggregate_ref(src, dst, w, h, **_):
+    C, E = src.shape
+    _, N, F = h.shape
+
+    def one(src_c, dst_c, w_c, h_c):
+        upd = h_c.astype(jnp.float32)[src_c] * w_c[:, None]
+        return jax.ops.segment_sum(upd, dst_c, num_segments=N)
+
+    return jax.vmap(one)(src, dst, w.astype(jnp.float32), h).astype(h.dtype)
+
+
+def gat_attention_ref(z, s_src, s_dst, struct, *, n_heads,
+                      negative_slope=0.2, **_):
+    C, N, F = z.shape
+    fh = F // n_heads
+    zf = z.astype(jnp.float32).reshape(C, N, n_heads, fh)
+    e = (s_dst.astype(jnp.float32).transpose(0, 2, 1)[:, :, :, None]
+         + s_src.astype(jnp.float32).transpose(0, 2, 1)[:, :, None, :])
+    e = jnp.where(e >= 0, e, negative_slope * e)
+    emask = (struct > 0)[:, None, :, :]
+    e = jnp.where(emask, e, NEG_INF)
+    attn = jax.nn.softmax(e, axis=-1)
+    attn = jnp.where(emask, attn, 0.0)
+    out = jnp.einsum("chij,cjhf->cihf", attn, zf)
+    return out.reshape(C, N, F).astype(z.dtype)

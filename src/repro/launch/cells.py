@@ -1,0 +1,163 @@
+"""Dry-run cell builders: one (function, example_args, shardings) triple per
+(arch x shape) cell, plus GNN serve cells for the paper's own models.
+
+Used by launch/dryrun.py (lower+compile), launch/roofline.py (terms) and
+benchmarks. Keeping the builders separate from the CLI keeps them
+importable without touching the XLA device-count env var.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any, Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import NamedSharding
+from jax.sharding import PartitionSpec as P
+
+from repro.configs.base import ModelConfig, ShapeConfig
+from repro.distributed.sharding import (activation_rules, batch_spec,
+                                        cache_pspecs, named, param_pspecs,
+                                        zero1_pspecs)
+from repro.gnn.model import GNNConfig, gnn_forward, init_gnn
+from repro.launch.mesh import data_axes
+from repro.launch.specs import specs_for
+from repro.models.common import logical_axis_rules
+from repro.models.transformer import (decode_step, init_params, prefill)
+from repro.train.optim import AdamWConfig, OptState, init_opt
+from repro.train.step import make_train_step
+
+
+def _tree_specs(tree, spec_fn):
+    return jax.tree.map(spec_fn, tree)
+
+
+def _batch_shardings(batch, bspec: P, mesh):
+    def spec(v):
+        nd = getattr(v, "ndim", 0)
+        if nd >= 2:
+            return NamedSharding(mesh, bspec)
+        if nd == 1:
+            return NamedSharding(mesh, P(None))
+        return NamedSharding(mesh, P())
+    return jax.tree.map(spec, batch)
+
+
+def build_cell(cfg: ModelConfig, shape: ShapeConfig, mesh
+               ) -> Tuple[Any, tuple, Any, Any, tuple]:
+    """Returns (fn, args, in_shardings, out_shardings, donate_argnums)
+    ready for jax.jit(...).lower(*args). Donation aliases the params/opt
+    (train) and KV cache (decode) buffers — without it every step would
+    double-allocate its largest operand."""
+    rules = activation_rules(cfg, mesh)
+    # learned-position archs (whisper) need the position table to cover
+    # the full cell seq_len; rope archs don't materialize positions
+    max_seq = shape.seq_len if cfg.family == "audio" \
+        else min(shape.seq_len, 4096)
+    params = jax.eval_shape(
+        lambda: init_params(cfg, jax.random.PRNGKey(0), max_seq=max_seq))
+    pspecs = param_pspecs(cfg, params, mesh)
+    p_shard = named(pspecs, mesh)
+    bspec = batch_spec(shape.global_batch, mesh)
+
+    if shape.kind == "train":
+        opt_cfg = AdamWConfig(moment_dtype=cfg.dtype.opt_dtype)
+        opt = jax.eval_shape(lambda: init_opt(params, opt_cfg))
+        mspec = zero1_pspecs(pspecs, params, mesh)
+        opt_shard = OptState(step=NamedSharding(mesh, P()),
+                             m=named(mspec, mesh), v=named(mspec, mesh))
+        batch = specs_for(cfg, shape)
+        b_shard = _batch_shardings(batch, bspec, mesh)
+        step = make_train_step(cfg, opt_cfg, remat=True)
+
+        def fn(p, o, b):
+            with logical_axis_rules(rules):
+                return step(p, o, b)
+
+        return (fn, (params, opt, batch),
+                (p_shard, opt_shard, b_shard),
+                (p_shard, opt_shard, None), (0, 1))
+
+    if shape.kind == "prefill":
+        batch = specs_for(cfg, shape)
+        b_shard = _batch_shardings(batch, bspec, mesh)
+
+        def fn(p, b):
+            with logical_axis_rules(rules):
+                return prefill(cfg, p, b)
+
+        return fn, (params, batch), (p_shard, b_shard), None, ()
+
+    # decode
+    d = specs_for(cfg, shape)
+    c_pspecs = cache_pspecs(cfg, d["cache"], mesh, shape.global_batch)
+    c_shard = named(c_pspecs, mesh)
+    tok_shard = NamedSharding(mesh, P(bspec[0] if len(bspec) else None,
+                                      None))
+    pos_shard = NamedSharding(mesh, P())
+
+    def fn(p, cache, token, pos):
+        with logical_axis_rules(rules):
+            return decode_step(cfg, p, cache, token, pos)
+
+    return (fn, (params, d["cache"], d["token"], d["pos"]),
+            (p_shard, c_shard, tok_shard, pos_shard),
+            (None, c_shard), (1,))   # donate the KV cache (in-place update)
+
+
+# ---------------------------------------------------------------------------
+# GNN serve cells (the paper's models on the production mesh)
+
+
+GNN_SERVE_BATCH = 4096      # targets per global step (8 per chip @ 512)
+
+
+def gnn_batch_specs(cfg: GNNConfig, C: int, f_pad: int = 0,
+                    variant: str = "base"
+                    ) -> Dict[str, jax.ShapeDtypeStruct]:
+    n = cfg.receptive_field
+    f = f_pad or cfg.f_in
+    sds = jax.ShapeDtypeStruct
+    if variant == "opt":
+        # beyond-paper serve slimming: ship ONLY the adjacency this model
+        # kind aggregates with, in bf16 (weights are 1/sqrt(deg) -- bf16's
+        # 8-bit mantissa is plenty), and bf16 features. Halves the
+        # HBM/PCIe bytes that dominate the GNN roofline.
+        d = {"feats": sds((C, n, f), np.dtype("bfloat16")),
+             "mask": sds((C, n), np.float32)}
+        if cfg.kind == "gcn":
+            d["adj"] = sds((C, n, n), np.dtype("bfloat16"))
+        else:
+            d["adj_mean"] = sds((C, n, n), np.dtype("bfloat16"))
+        return d
+    return {"feats": sds((C, n, f), np.float32),
+            "adj": sds((C, n, n), np.float32),
+            "adj_mean": sds((C, n, n), np.float32),
+            "mask": sds((C, n), np.float32)}
+
+
+def build_gnn_cell(cfg: GNNConfig, mesh, C: int = GNN_SERVE_BATCH,
+                   variant: str = "base"):
+    """Mini-batch GNN inference step on the production mesh. Targets (the
+    paper's N_pe parallelism) shard over EVERY mesh axis — the GNN weights
+    are tiny and replicated, so the whole pod is one large PE array."""
+    all_axes = tuple(mesh.axis_names)
+    n_total = int(np.prod([mesh.shape[a] for a in all_axes]))
+    cspec = P(all_axes) if C % n_total == 0 else P(data_axes(mesh))
+    params = jax.eval_shape(
+        lambda: init_gnn(cfg, jax.random.PRNGKey(0)))
+    if variant == "opt":     # bf16 weights: halves every layer-boundary
+        params = jax.tree.map(                        # write the XLA path
+            lambda l: jax.ShapeDtypeStruct(l.shape, jnp.bfloat16), params)
+    p_shard = jax.tree.map(lambda _: NamedSharding(mesh, P()), params)
+    batch = gnn_batch_specs(cfg, C, variant=variant)
+    b_shard = {k: NamedSharding(mesh, P(*([cspec[0]] + [None] * (v.ndim - 1))
+                                        if len(cspec) else [None] * v.ndim))
+               for k, v in batch.items()}
+
+    def fn(p, b):
+        emb, _ = gnn_forward(cfg, p, b, mode="dense")
+        return emb
+
+    return fn, (params, batch), (p_shard, b_shard), None, ()

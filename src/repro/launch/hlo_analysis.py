@@ -1,0 +1,293 @@
+"""Static analysis of compiled (post-SPMD) HLO text for roofline terms.
+
+Why not just ``compiled.cost_analysis()``: XLA counts a ``while`` body ONCE
+(verified on this backend: an L-step scan reports 1/L of the true FLOPs),
+and it reports no per-collective breakdown at all. This analyzer parses the
+HLO text into computations, builds the call graph (fusion ``calls=``,
+``to_apply=``, while ``body=/condition=``), reads each while's
+``known_trip_count`` from its backend_config, and propagates execution
+multipliers — so FLOPs, HBM bytes and collective bytes are *steady-state
+per-device per-step* quantities.
+
+Conventions:
+  * FLOPs: 2*prod(result)*prod(contracted dims) per dot (batch dims
+    handled: contracted size read from the lhs operand shape). Counted in
+    every computation, scaled by its multiplier — remat recompute therefore
+    shows up honestly (that is the point of MODEL_FLOPS / HLO_FLOPS).
+  * HBM bytes: sum over *top-level* ops (fusion bodies excluded — their
+    internals live in registers/VMEM) of result + operand bytes, skipping
+    pure metadata ops (tuple/gte/parameter/constant/bitcast).
+  * Collective bytes: per op, the result-buffer bytes with the standard
+    ring-cost factor applied: all-gather/reduce-scatter move
+    (g-1)/g * bytes across links, all-reduce 2x that, all-to-all
+    (g-1)/g, collective-permute 1x. Group size g parsed from
+    replica_groups (iota ``[a,b]<=[n]`` or explicit braces).
+"""
+from __future__ import annotations
+
+import json
+import re
+from collections import defaultdict
+from dataclasses import dataclass, field
+from typing import Dict, List, Optional, Tuple
+
+DTYPE_BYTES = {"f64": 8, "f32": 4, "f16": 2, "bf16": 2, "f8e4m3": 1,
+               "f8e5m2": 1, "s64": 8, "u64": 8, "s32": 4, "u32": 4,
+               "s16": 2, "u16": 2, "s8": 1, "u8": 1, "pred": 1,
+               "c64": 8, "c128": 16}
+
+COLLECTIVES = ("all-gather", "all-reduce", "reduce-scatter", "all-to-all",
+               "collective-permute")
+
+_SHAPE_RE = re.compile(r"(\w+)\[([\d,]*)\]")
+_DEF_RE = re.compile(r"^\s*(?:ROOT\s+)?%([\w\.\-]+)\s*=\s*(.*)$")
+_COMP_RE = re.compile(r"^(?:ENTRY\s+)?%?([\w\.\-]+)\s*\(.*\)\s*->\s*.*{")
+_CALL_ATTR_RE = re.compile(
+    r"(?:calls|to_apply|condition|body)=%([\w\.\-]+)")
+_TRIP_RE = re.compile(r'"known_trip_count":\{"n":"(\d+)"\}')
+_GROUPS_IOTA_RE = re.compile(r"replica_groups=\[(\d+),(\d+)\]<=")
+_GROUPS_BRACE_RE = re.compile(r"replica_groups=\{\{([\d,]+)\}")
+
+
+def _parse_shapes(s: str) -> List[Tuple[str, Tuple[int, ...]]]:
+    """All dtype[shape] tokens in a type string (tuples give several)."""
+    out = []
+    for m in _SHAPE_RE.finditer(s):
+        dt, dims = m.group(1), m.group(2)
+        if dt not in DTYPE_BYTES:
+            continue
+        shape = tuple(int(x) for x in dims.split(",")) if dims else ()
+        out.append((dt, shape))
+    return out
+
+
+def _nbytes(shapes) -> int:
+    tot = 0
+    for dt, shape in shapes:
+        n = 1
+        for d in shape:
+            n *= d
+        tot += n * DTYPE_BYTES[dt]
+    return tot
+
+
+@dataclass
+class OpInfo:
+    name: str
+    kind: str
+    result_shapes: list
+    operands: List[str]
+    line: str
+
+    @property
+    def result_bytes(self) -> int:
+        return _nbytes(self.result_shapes)
+
+
+@dataclass
+class Computation:
+    name: str
+    is_entry: bool = False
+    is_fusion_body: bool = False
+    ops: List[OpInfo] = field(default_factory=list)
+    symbols: Dict[str, list] = field(default_factory=dict)  # name->shapes
+    calls: List[Tuple[str, str]] = field(default_factory=list)
+    # (callee, kind) kind in {call, while_body, while_cond}
+    while_trips: Dict[str, int] = field(default_factory=dict)  # body->trip
+    cond_trips: Dict[str, int] = field(default_factory=dict)   # cond->trip
+
+
+_OPS_SKIP_BYTES = {"tuple", "get-tuple-element", "parameter", "constant",
+                   "bitcast", "after-all", "partition-id", "replica-id",
+                   "iota", "while", "conditional", "call"}
+
+
+_KIND_RE = re.compile(r"[\s)}\]]([a-z][\w\-]*)\(")
+
+
+def _op_kind(rest: str) -> str:
+    # rest looks like: "f32[8,64]{1,0} dot(%a, %b), attrs..." or, for
+    # tuple-typed results, "(s32[], f32[8,16]{1,0}) while(%tuple), ...".
+    # The opcode is the first lowercase word directly before a '(' after
+    # the result type — scanning left-to-right stays ahead of metadata.
+    m = _KIND_RE.search(rest)
+    return m.group(1) if m else "unknown"
+
+
+def parse_module(txt: str) -> Dict[str, Computation]:
+    comps: Dict[str, Computation] = {}
+    cur: Optional[Computation] = None
+    for raw in txt.splitlines():
+        line = raw.rstrip()
+        s = line.strip()
+        if not s or s.startswith("//"):
+            continue
+        mc = _COMP_RE.match(line) if not line.startswith(" ") else None
+        if mc and ("->" in line):
+            name = mc.group(1)
+            cur = Computation(name=name,
+                              is_entry=line.startswith("ENTRY"),
+                              is_fusion_body="fused_computation" in name
+                              or "wrapped_" in name)
+            comps[name] = cur
+            continue
+        if s == "}":
+            cur = None
+            continue
+        if cur is None:
+            continue
+        md = _DEF_RE.match(s)
+        if not md:
+            continue
+        opname, rest = md.group(1), md.group(2)
+        kind = _op_kind(rest)
+        # result type = text before the op kind token
+        type_part = rest.split(f" {kind}(")[0] if f" {kind}(" in rest \
+            else rest.split("(")[0]
+        shapes = _parse_shapes(type_part)
+        # operand names
+        paren = rest[rest.find("("):]
+        opnds = re.findall(r"%([\w\.\-]+)", paren.split("),")[0]
+                           if ")," in paren else paren)
+        cur.symbols[opname] = shapes
+        op = OpInfo(opname, kind, shapes, opnds, s)
+        cur.ops.append(op)
+        for m in _CALL_ATTR_RE.finditer(s):
+            callee = m.group(1)
+            k = "call"
+            if f"body=%{callee}" in s:
+                k = "while_body"
+            elif f"condition=%{callee}" in s:
+                k = "while_cond"
+            cur.calls.append((callee, k))
+        if kind == "while":
+            mt = _TRIP_RE.search(s)
+            trip = int(mt.group(1)) if mt else 1
+            mb = re.search(r"body=%([\w\.\-]+)", s)
+            if mb:
+                cur.while_trips[mb.group(1)] = trip
+            mc = re.search(r"condition=%([\w\.\-]+)", s)
+            if mc:
+                cur.cond_trips[mc.group(1)] = trip
+    return comps
+
+
+def multipliers(comps: Dict[str, Computation]) -> Dict[str, float]:
+    entry = next((c.name for c in comps.values() if c.is_entry), None)
+    mult: Dict[str, float] = defaultdict(float)
+    mult[entry] = 1.0
+    # propagate in topological-ish order via worklist
+    work = [entry]
+    seen_edges = set()
+    while work:
+        cname = work.pop()
+        c = comps.get(cname)
+        if c is None:
+            continue
+        m = mult[cname]
+        for callee, kind in c.calls:
+            factor = 1.0
+            if kind == "while_body":
+                factor = float(c.while_trips.get(callee, 1))
+            elif kind == "while_cond":
+                factor = float(c.cond_trips.get(callee, 0)) + 1.0
+            edge = (cname, callee)
+            if edge in seen_edges:
+                continue
+            seen_edges.add(edge)
+            mult[callee] += m * factor
+            work.append(callee)
+    return dict(mult)
+
+
+def _dot_flops(op: OpInfo, comp: Computation) -> float:
+    result_elems = 1
+    for _, shape in op.result_shapes:
+        for d in shape:
+            result_elems *= d
+    m = re.search(r"lhs_contracting_dims=\{([\d,]*)\}", op.line)
+    if not m or not op.operands:
+        return 2.0 * result_elems          # fallback
+    dims = [int(x) for x in m.group(1).split(",") if x]
+    lhs = comp.symbols.get(op.operands[0])
+    if not lhs:
+        return 2.0 * result_elems
+    _, lhs_shape = lhs[0]
+    contracted = 1
+    for d in dims:
+        if d < len(lhs_shape):
+            contracted *= lhs_shape[d]
+    return 2.0 * result_elems * contracted
+
+
+def _group_size(line: str, default: int) -> int:
+    m = _GROUPS_IOTA_RE.search(line)
+    if m:
+        return int(m.group(2))
+    m = _GROUPS_BRACE_RE.search(line)
+    if m:
+        return len(m.group(1).split(","))
+    return default
+
+
+_COLL_FACTOR = {"all-gather": 1.0, "reduce-scatter": 1.0, "all-reduce": 2.0,
+                "all-to-all": 1.0, "collective-permute": 1.0}
+
+
+@dataclass
+class HLOSummary:
+    flops: float = 0.0
+    hbm_bytes: float = 0.0
+    collective_bytes: float = 0.0            # raw buffer bytes x multiplier
+    collective_link_bytes: float = 0.0       # with ring (g-1)/g cost factors
+    per_collective: Dict[str, float] = field(default_factory=dict)
+    collective_count: Dict[str, int] = field(default_factory=dict)
+    n_while: int = 0
+    trip_counts: List[int] = field(default_factory=list)
+
+    def to_json(self) -> dict:
+        return {
+            "flops": self.flops, "hbm_bytes": self.hbm_bytes,
+            "collective_bytes": self.collective_bytes,
+            "collective_link_bytes": self.collective_link_bytes,
+            "per_collective": self.per_collective,
+            "collective_count": self.collective_count,
+            "n_while": self.n_while, "trip_counts": self.trip_counts,
+        }
+
+
+def analyze(txt: str, n_devices: int = 1) -> HLOSummary:
+    comps = parse_module(txt)
+    mult = multipliers(comps)
+    out = HLOSummary()
+    for cname, comp in comps.items():
+        m = mult.get(cname, 0.0)
+        if m <= 0:
+            continue
+        for op in comp.ops:
+            if op.kind in ("dot",):
+                out.flops += m * _dot_flops(op, comp)
+            elif op.kind == "convolution":
+                out.flops += m * 2.0 * op.result_bytes  # rough; none expected
+            if op.kind in COLLECTIVES:
+                b = op.result_bytes
+                g = _group_size(op.line, n_devices)
+                ring = _COLL_FACTOR[op.kind] * b * max(g - 1, 0) / max(g, 1)
+                out.collective_bytes += m * b
+                out.collective_link_bytes += m * ring
+                out.per_collective[op.kind] = \
+                    out.per_collective.get(op.kind, 0.0) + m * b
+                out.collective_count[op.kind] = \
+                    out.collective_count.get(op.kind, 0) + 1
+            if op.kind == "while":
+                out.n_while += 1
+                out.trip_counts.extend(comp.while_trips.values())
+            if not comp.is_fusion_body and op.kind not in _OPS_SKIP_BYTES:
+                opnd_bytes = sum(
+                    _nbytes(comp.symbols.get(o, [])) for o in op.operands)
+                out.hbm_bytes += m * (op.result_bytes + opnd_bytes)
+    return out
+
+
+def analyze_compiled(compiled, n_devices: int = 1) -> HLOSummary:
+    return analyze(compiled.as_text(), n_devices)

@@ -1,0 +1,201 @@
+"""Roofline analysis (deliverable g): three terms per (arch x shape x mesh)
+cell from the dry-run artifacts, dominant bottleneck, and the
+MODEL_FLOPS / HLO_FLOPS usefulness ratio.
+
+    compute   = HLO_FLOPs_per_device / peak_FLOPs_per_chip
+    memory    = HLO_bytes_per_device / HBM_bw
+    collective= collective_link_bytes_per_device / ICI_link_bw
+
+HLO terms come from launch.hlo_analysis (per-device, while-trip-corrected).
+Hardware constants are the assignment's TPU v5e numbers.
+
+Usage: PYTHONPATH=src python -m repro.launch.roofline \
+           --dryrun-dir results/dryrun [--fmt md|json]
+"""
+from __future__ import annotations
+
+import argparse
+import glob
+import json
+import os
+from dataclasses import dataclass
+from typing import Dict, Optional
+
+PEAK_FLOPS = 197e12          # bf16 / chip
+HBM_BW = 819e9               # bytes/s
+ICI_BW = 50e9                # bytes/s/link
+
+
+# ---------------------------------------------------------------------------
+# analytic MODEL_FLOPS
+
+
+def _param_counts(arch: str) -> Dict[str, float]:
+    """(total, active, embedding) parameter counts via eval_shape."""
+    import jax
+    from repro.configs.registry import get_config
+    from repro.models.transformer import init_params
+    cfg = get_config(arch)
+    shapes = jax.eval_shape(
+        lambda: init_params(cfg, jax.random.PRNGKey(0), max_seq=4096))
+    total = active = embed = 0.0
+    moe = cfg.moe
+    flat = jax.tree_util.tree_flatten_with_path(shapes)[0]
+    for path, leaf in flat:
+        keys = [str(getattr(p, "key", "")) for p in path]
+        n = float(leaf.size)
+        total += n
+        if any(k in ("embed", "lm_head", "pos_emb", "enc_pos_emb")
+               for k in keys):
+            embed += n
+            continue
+        is_routed = (moe is not None and "ffn" in keys
+                     and any(k in ("w_gate", "w_up", "w_down")
+                             for k in keys)
+                     and leaf.ndim >= 3
+                     and moe.num_experts in leaf.shape)
+        active += n * (moe.top_k / moe.num_experts) if is_routed else n
+    return {"total": total, "active": active, "embed": embed,
+            "nonembed": total - embed,
+            "active_nonembed": active - 0.0}
+
+
+def model_flops(arch: str, shape_kind: str, tokens: float) -> float:
+    """6*N*D train / 2*N*D forward-only, N = active non-embedding params."""
+    counts = _param_counts(arch)
+    n = counts["active"] - 0.0
+    n_nonembed = n - counts["embed"] if n > counts["embed"] else n
+    factor = 6.0 if shape_kind == "train" else 2.0
+    return factor * n_nonembed * tokens
+
+
+SHAPE_TOKENS = {"train_4k": 4096 * 256, "prefill_32k": 32768 * 32,
+                "decode_32k": 128.0, "long_500k": 1.0}
+SHAPE_KIND = {"train_4k": "train", "prefill_32k": "prefill",
+              "decode_32k": "decode", "long_500k": "decode"}
+
+
+# ---------------------------------------------------------------------------
+
+
+@dataclass
+class RooflineRow:
+    arch: str
+    shape: str
+    mesh: str
+    t_compute: float
+    t_memory: float
+    t_collective: float
+    dominant: str
+    model_flops: Optional[float]
+    hlo_flops_global: float
+    useful_ratio: Optional[float]
+    fit: bool
+    hint: str
+
+    @property
+    def t_bound(self) -> float:
+        return max(self.t_compute, self.t_memory, self.t_collective)
+
+    @property
+    def roofline_fraction(self) -> float:
+        """compute-term share of the binding constraint: 1.0 = compute
+        bound at peak; lower = dominated by memory/collective."""
+        return self.t_compute / self.t_bound if self.t_bound else 0.0
+
+
+_HINTS = {
+    "compute": "at compute roof — reduce recompute (remat policy) or"
+               " raise MXU utilization via fusion/layout",
+    "memory": "HBM-bound — increase arithmetic intensity: fuse attention"
+              " (flash), keep activations bf16, raise per-step batch/chip",
+    "collective": "ICI-bound — reshard to cut all-gathers (kv-head"
+                  " replication, expert-parallel a2a), overlap via"
+                  " async collectives / decomposed matmul-collectives",
+}
+
+
+def row_from_record(rec: dict) -> Optional[RooflineRow]:
+    if not rec.get("ok"):
+        return None
+    rec = dict(rec, shape=rec["shape"].replace(".opt", "+opt"))
+    h = rec["hlo"]
+    ndev = rec["n_devices"]
+    t_c = h["flops"] / PEAK_FLOPS
+    t_m = h["hbm_bytes"] / HBM_BW
+    t_l = h["collective_link_bytes"] / ICI_BW
+    dom = max(("compute", t_c), ("memory", t_m), ("collective", t_l),
+              key=lambda kv: kv[1])[0]
+    mf = None
+    ratio = None
+    base_shape = rec["shape"].replace("+opt", "")
+    if base_shape in SHAPE_TOKENS and not rec["arch"].startswith(
+            ("gcn", "sage", "gat", "gin")):
+        mf = model_flops(rec["arch"], SHAPE_KIND[base_shape],
+                         SHAPE_TOKENS[base_shape])
+        ratio = mf / (h["flops"] * ndev) if h["flops"] else None
+    peak = rec["memory"]["peak_bytes_est"]
+    return RooflineRow(
+        arch=rec["arch"], shape=rec["shape"], mesh=rec["mesh"],
+        t_compute=t_c, t_memory=t_m, t_collective=t_l, dominant=dom,
+        model_flops=mf, hlo_flops_global=h["flops"] * ndev,
+        useful_ratio=ratio, fit=peak <= 16 * 2 ** 30,
+        hint=_HINTS[dom])
+
+
+def load_rows(dryrun_dir: str):
+    rows = []
+    for path in sorted(glob.glob(os.path.join(dryrun_dir, "*.json"))):
+        with open(path) as f:
+            rec = json.load(f)
+        r = row_from_record(rec)
+        if r:
+            rows.append(r)
+    return rows
+
+
+def _fmt_t(t: float) -> str:
+    if t >= 1:
+        return f"{t:.2f}s"
+    if t >= 1e-3:
+        return f"{t*1e3:.2f}ms"
+    return f"{t*1e6:.1f}us"
+
+
+def render_md(rows) -> str:
+    out = ["| arch | shape | mesh | compute | memory | collective | "
+           "bound | useful FLOPs | fits 16G |",
+           "|---|---|---|---|---|---|---|---|---|"]
+    for r in rows:
+        ur = f"{r.useful_ratio:.2f}" if r.useful_ratio else "—"
+        out.append(
+            f"| {r.arch} | {r.shape} | {r.mesh} | {_fmt_t(r.t_compute)} | "
+            f"{_fmt_t(r.t_memory)} | {_fmt_t(r.t_collective)} | "
+            f"{r.dominant} | {ur} | {'y' if r.fit else 'NO'} |")
+    bounds = {}
+    for r in rows:
+        bounds[r.dominant] = bounds.get(r.dominant, 0) + 1
+    fits = sum(1 for r in rows if r.fit)
+    fracs = sorted(r.roofline_fraction for r in rows)
+    out.append("")
+    out.append(f"cells: {len(rows)}; fits 16G: {fits}; bound mix: "
+               + ", ".join(f"{k}={v}" for k, v in sorted(bounds.items()))
+               + f"; roofline fraction median {fracs[len(fracs)//2]:.3f}, "
+                 f"best {fracs[-1]:.3f}")
+    return "\n".join(out)
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--dryrun-dir", default="results/dryrun")
+    ap.add_argument("--fmt", default="md", choices=["md", "json"])
+    args = ap.parse_args()
+    rows = load_rows(args.dryrun_dir)
+    if args.fmt == "md":
+        print(render_md(rows))
+    else:
+        print(json.dumps([r.__dict__ for r in rows], indent=1))
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,54 @@
+"""Serving launcher — mini-batch GNN inference (the paper's workload).
+
+  PYTHONPATH=src python -m repro.launch.serve --model gcn --layers 3 \
+      --receptive-field 128 --dataset flickr --scale 0.05 \
+      --requests 256 --batch-size 64
+"""
+from __future__ import annotations
+
+import argparse
+import json
+
+import numpy as np
+
+from repro.core.engine import DecoupledEngine
+from repro.gnn.model import GNNConfig
+from repro.graphs.synthetic import get_graph
+from repro.serve.gnn_server import GNNServer
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--model", default="gcn",
+                    choices=["gcn", "sage", "gin", "gat"])
+    ap.add_argument("--layers", type=int, default=3)
+    ap.add_argument("--receptive-field", type=int, default=128)
+    ap.add_argument("--dataset", default="flickr")
+    ap.add_argument("--scale", type=float, default=0.05)
+    ap.add_argument("--requests", type=int, default=256)
+    ap.add_argument("--batch-size", type=int, default=64)
+    ap.add_argument("--impl", default="xla", choices=["xla", "pallas"])
+    args = ap.parse_args()
+
+    g = get_graph(args.dataset, scale=args.scale)
+    cfg = GNNConfig(kind=args.model, n_layers=args.layers,
+                    receptive_field=args.receptive_field,
+                    f_in=g.feature_dim)
+    engine = DecoupledEngine(g, cfg, batch_size=args.batch_size,
+                             impl=args.impl)
+    print(f"graph {g.name}: {g.num_vertices} vertices, {g.num_edges} edges")
+    print(f"model {cfg.display}; ACK mode={engine.mode} "
+          f"({engine.decision.reason})")
+
+    server = GNNServer(engine)
+    server.start()
+    rng = np.random.default_rng(0)
+    reqs = [server.submit(t) for t in
+            rng.integers(0, g.num_vertices, size=args.requests)]
+    server.drain(reqs, timeout=600)
+    server.stop()
+    print(json.dumps(server.stats.percentiles(), indent=1))
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,71 @@
+"""input_specs(): ShapeDtypeStruct stand-ins (or real random batches) for
+every model input of every (arch x shape) cell. Shardable, weak-type
+correct, no device allocation in 'specs' mode."""
+from __future__ import annotations
+
+from typing import Any, Dict
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import ModelConfig, ShapeConfig
+from repro.models.transformer import init_cache
+
+
+def _mk(mode, rng, shape, dtype, maxval=None):
+    if mode == "specs":
+        return jax.ShapeDtypeStruct(shape, dtype)
+    if np.issubdtype(dtype, np.integer):
+        return jnp.asarray(rng.integers(0, maxval or 2, size=shape,
+                                        dtype=np.int32))
+    return jnp.asarray(rng.standard_normal(shape).astype(dtype))
+
+
+def train_specs(cfg: ModelConfig, shape: ShapeConfig, mode="specs",
+                seed=0) -> Dict[str, Any]:
+    rng = np.random.default_rng(seed)
+    B, S = shape.global_batch, shape.seq_len
+    d = {
+        "tokens": _mk(mode, rng, (B, S), np.int32, cfg.vocab_size),
+        "labels": _mk(mode, rng, (B, S), np.int32, cfg.vocab_size),
+    }
+    if cfg.family == "audio":
+        d["frames"] = _mk(mode, rng, (B, cfg.encoder.n_frames, cfg.d_model),
+                          np.float32)
+    if cfg.family == "vlm":
+        d["patch_embeds"] = _mk(mode, rng,
+                                (B, cfg.vision.n_patches, cfg.d_model),
+                                np.float32)
+    return d
+
+
+def prefill_specs(cfg: ModelConfig, shape: ShapeConfig, mode="specs",
+                  seed=0) -> Dict[str, Any]:
+    d = train_specs(cfg, shape, mode, seed)
+    d.pop("labels")
+    return d
+
+
+def decode_specs(cfg: ModelConfig, shape: ShapeConfig, mode="specs",
+                 seed=0) -> Dict[str, Any]:
+    """Inputs of serve_step: one new token + a full KV cache of seq_len."""
+    rng = np.random.default_rng(seed)
+    B, S = shape.global_batch, shape.seq_len
+    cache = init_cache(cfg, B, S, mode="specs" if mode == "specs" else
+                       "zeros")
+    d = {
+        "token": _mk(mode, rng, (B, 1), np.int32, cfg.vocab_size),
+        "pos": (jax.ShapeDtypeStruct((), jnp.int32) if mode == "specs"
+                else jnp.int32(S - 1)),
+        "cache": cache,
+    }
+    return d
+
+
+def specs_for(cfg: ModelConfig, shape: ShapeConfig, mode="specs", seed=0):
+    if shape.kind == "train":
+        return train_specs(cfg, shape, mode, seed)
+    if shape.kind == "prefill":
+        return prefill_specs(cfg, shape, mode, seed)
+    return decode_specs(cfg, shape, mode, seed)

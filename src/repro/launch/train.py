@@ -1,0 +1,45 @@
+"""Training launcher.
+
+Reduced configs run end-to-end on CPU (examples/tests); full configs are
+meant for the real mesh — on this container use launch/dryrun.py for the
+compile-only path.
+
+  PYTHONPATH=src python -m repro.launch.train --arch deepseek-7b \
+      --reduced --steps 100 --ckpt-dir /tmp/ckpt
+"""
+from __future__ import annotations
+
+import argparse
+import json
+
+from repro.configs.registry import get_config
+from repro.train.loop import TrainJobConfig, train
+from repro.train.optim import AdamWConfig
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", required=True)
+    ap.add_argument("--reduced", action="store_true")
+    ap.add_argument("--steps", type=int, default=100)
+    ap.add_argument("--seq-len", type=int, default=128)
+    ap.add_argument("--global-batch", type=int, default=8)
+    ap.add_argument("--lr", type=float, default=1e-3)
+    ap.add_argument("--ckpt-dir", default="/tmp/repro_ckpt")
+    ap.add_argument("--ckpt-every", type=int, default=50)
+    ap.add_argument("--log", default=None)
+    args = ap.parse_args()
+
+    cfg = get_config(args.arch, reduced=args.reduced)
+    job = TrainJobConfig(steps=args.steps, ckpt_every=args.ckpt_every,
+                         ckpt_dir=args.ckpt_dir, log_path=args.log,
+                         seq_len=args.seq_len,
+                         global_batch=args.global_batch)
+    _, _, hist = train(cfg, job, AdamWConfig(lr=args.lr))
+    print(json.dumps({"first_loss": hist[0]["loss"],
+                      "last_loss": hist[-1]["loss"],
+                      "steps": len(hist)}, indent=1))
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,180 @@
+"""Multi-head / grouped-query attention with causal, cross and decode paths.
+
+Shapes: hidden [B, S, D]; q [B, S, H, Dh]; k/v [B, S, Kh, Dh] with H % Kh == 0.
+Decode path consumes a KV cache [B, S_max, Kh, Dh] and a scalar position.
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.common import dense_init, shard, split_keys
+from repro.models.rope import apply_rope
+
+NEG_INF = -1e30
+
+
+def init_attn(key, d_model, n_heads, n_kv, head_dim, qkv_bias=False,
+              dtype=jnp.float32):
+    ks = split_keys(key, 4)
+    p = {
+        "wq": dense_init(ks[0], (d_model, n_heads * head_dim), dtype=dtype),
+        "wk": dense_init(ks[1], (d_model, n_kv * head_dim), dtype=dtype),
+        "wv": dense_init(ks[2], (d_model, n_kv * head_dim), dtype=dtype),
+        "wo": dense_init(ks[3], (n_heads * head_dim, d_model), dtype=dtype),
+    }
+    if qkv_bias:
+        p["bq"] = jnp.zeros((n_heads * head_dim,), dtype)
+        p["bk"] = jnp.zeros((n_kv * head_dim,), dtype)
+        p["bv"] = jnp.zeros((n_kv * head_dim,), dtype)
+    return p
+
+
+def qkv(params, x, n_heads, n_kv, head_dim):
+    B, S, _ = x.shape
+    q = x @ params["wq"]
+    k = x @ params["wk"]
+    v = x @ params["wv"]
+    if "bq" in params:
+        q, k, v = q + params["bq"], k + params["bk"], v + params["bv"]
+    q = q.reshape(B, S, n_heads, head_dim)
+    k = k.reshape(B, S, n_kv, head_dim)
+    v = v.reshape(B, S, n_kv, head_dim)
+    return q, k, v
+
+
+def gqa_scores(q, k):
+    """q [B,Sq,H,Dh], k [B,Sk,Kh,Dh] -> scores [B,Kh,G,Sq,Sk]."""
+    B, Sq, H, Dh = q.shape
+    Kh = k.shape[2]
+    G = H // Kh
+    qg = q.reshape(B, Sq, Kh, G, Dh)
+    s = jnp.einsum("bqkgd,bskd->bkgqs", qg, k,
+                   preferred_element_type=jnp.float32)
+    return s / jnp.sqrt(Dh).astype(jnp.float32)
+
+
+def gqa_out(probs, v):
+    """probs [B,Kh,G,Sq,Sk], v [B,Sk,Kh,Dh] -> [B,Sq,H,Dh]."""
+    B, Kh, G, Sq, _ = probs.shape
+    Dh = v.shape[-1]
+    o = jnp.einsum("bkgqs,bskd->bqkgd", probs.astype(v.dtype), v)
+    return o.reshape(B, Sq, Kh * G, Dh)
+
+
+def chunked_gqa_attention(q, k, v, *, causal=True, block_q=1024):
+    """Flash-style online attention in plain XLA: the [S, S] score matrix
+    is never materialized -- queries are processed in blocks of ``block_q``
+    under ``lax.map``, each block seeing only a [..., Bq, S] score tile.
+    Peak temp memory drops from O(S^2) to O(S * block_q) per head group.
+
+    q [B,S,H,Dh]; k/v [B,S,Kh,Dh]. Returns [B,S,H,Dh].
+    """
+    B, S, H, Dh = q.shape
+    Kh = k.shape[2]
+    G = H // Kh
+    bq = min(block_q, S)
+    assert S % bq == 0
+    nblk = S // bq
+    qg = q.reshape(B, S, Kh, G, Dh).transpose(0, 2, 3, 1, 4)  # [B,Kh,G,S,D]
+    kt = k.transpose(0, 2, 1, 3)                              # [B,Kh,S,D]
+    vt = v.transpose(0, 2, 1, 3)
+    scale = 1.0 / jnp.sqrt(Dh).astype(jnp.float32)
+
+    def one_block(i):
+        qb = jax.lax.dynamic_slice_in_dim(qg, i * bq, bq, axis=3)
+        s = jnp.einsum("bkgqd,bksd->bkgqs", qb, kt,
+                       preferred_element_type=jnp.float32) * scale
+        if causal:
+            rows = i * bq + jnp.arange(bq)
+            mask = rows[:, None] >= jnp.arange(S)[None, :]
+            s = jnp.where(mask[None, None, None], s, NEG_INF)
+        m = jnp.max(s, axis=-1, keepdims=True)
+        p = jnp.exp(s - m)
+        num = jnp.einsum("bkgqs,bksd->bkgqd", p.astype(vt.dtype), vt)
+        den = jnp.sum(p, axis=-1)[..., None].astype(vt.dtype)
+        return num / jnp.maximum(den, 1e-20)
+
+    ob = jax.lax.map(one_block, jnp.arange(nblk))   # [nblk,B,Kh,G,bq,D]
+    o = ob.transpose(1, 2, 3, 0, 4, 5).reshape(B, Kh, G, S, Dh)
+    return o.transpose(0, 3, 1, 2, 4).reshape(B, S, H, Dh)
+
+
+def full_attention(params, x, *, n_heads, n_kv, head_dim, rope_theta=1e4,
+                   rope_fraction=1.0, causal=True, positions=None,
+                   chunk_q: int = 0):
+    """Training / prefill attention. Returns [B, S, D].
+
+    ``chunk_q`` > 0 switches to the chunked online-softmax path (beyond-
+    paper memory optimization; 0 keeps the naive S x S baseline)."""
+    B, S, _ = x.shape
+    q, k, v = qkv(params, x, n_heads, n_kv, head_dim)
+    if positions is None:
+        positions = jnp.arange(S)[None, :]
+    q = apply_rope(q, positions, rope_theta, rope_fraction)
+    k = apply_rope(k, positions, rope_theta, rope_fraction)
+    q = shard(q, ("batch", None, "heads", None))
+    k = shard(k, ("batch", None, "kv_heads", None))
+    v = shard(v, ("batch", None, "kv_heads", None))
+    if chunk_q and S > chunk_q and S % chunk_q == 0:
+        o = chunked_gqa_attention(q, k, v, causal=causal, block_q=chunk_q)
+    else:
+        s = gqa_scores(q, k)                              # [B,Kh,G,S,S]
+        if causal:
+            mask = jnp.tril(jnp.ones((S, S), bool))
+            s = jnp.where(mask, s, NEG_INF)
+        p = jax.nn.softmax(s, axis=-1)
+        o = gqa_out(p, v)
+    o = shard(o, ("batch", None, "heads", None))
+    return o.reshape(B, S, n_heads * head_dim) @ params["wo"]
+
+
+def cross_attention(params, x, kv_cache, *, n_heads, n_kv, head_dim):
+    """x [B,Sq,D] attends to precomputed (k,v) [B,Skv,Kh,Dh] (whisper)."""
+    B, Sq, _ = x.shape
+    q = (x @ params["wq"]).reshape(B, Sq, n_heads, head_dim)
+    if "bq" in params:
+        q = q + params["bq"].reshape(n_heads, head_dim)
+    k, v = kv_cache
+    s = gqa_scores(q, k)
+    p = jax.nn.softmax(s, axis=-1)
+    o = gqa_out(p, v)
+    return o.reshape(B, Sq, n_heads * head_dim) @ params["wo"]
+
+
+def cross_kv(params, enc_out, *, n_kv, head_dim):
+    B, Skv, _ = enc_out.shape
+    k = (enc_out @ params["wk"]).reshape(B, Skv, n_kv, head_dim)
+    v = (enc_out @ params["wv"]).reshape(B, Skv, n_kv, head_dim)
+    if "bk" in params:
+        k = k + params["bk"].reshape(n_kv, head_dim)
+        v = v + params["bv"].reshape(n_kv, head_dim)
+    return k, v
+
+
+def decode_attention(params, x, k_cache, v_cache, pos, *, n_heads, n_kv,
+                     head_dim, rope_theta=1e4, rope_fraction=1.0):
+    """One-token decode. x [B,1,D]; caches [B,S,Kh,Dh]; pos scalar int32.
+
+    Writes the new k/v at ``pos`` then attends over positions <= pos.
+    Returns (out [B,1,D], k_cache, v_cache).
+    """
+    B = x.shape[0]
+    S = k_cache.shape[1]
+    q, k, v = qkv(params, x, n_heads, n_kv, head_dim)
+    posv = jnp.full((B, 1), pos, jnp.int32)
+    q = apply_rope(q, posv, rope_theta, rope_fraction)
+    k = apply_rope(k, posv, rope_theta, rope_fraction)
+    k_cache = jax.lax.dynamic_update_slice(
+        k_cache, k.astype(k_cache.dtype), (0, pos, 0, 0))
+    v_cache = jax.lax.dynamic_update_slice(
+        v_cache, v.astype(v_cache.dtype), (0, pos, 0, 0))
+    s = gqa_scores(q, k_cache)                            # [B,Kh,G,1,S]
+    valid = (jnp.arange(S) <= pos)[None, None, None, None, :]
+    s = jnp.where(valid, s, NEG_INF)
+    p = jax.nn.softmax(s, axis=-1)
+    o = gqa_out(p, v_cache)
+    out = o.reshape(B, 1, n_heads * head_dim) @ params["wo"]
+    return out, k_cache, v_cache

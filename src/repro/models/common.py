@@ -1,0 +1,110 @@
+"""Shared model building blocks: norms, dense init, activation, sharding hook.
+
+Models are functional: ``init_*`` returns nested dicts of jnp arrays,
+``apply``-style functions are pure. Activation sharding is annotated through
+``shard()`` with *logical* axis names; the mapping to mesh axes is installed
+by the launcher (see repro.distributed.sharding) and is a no-op otherwise, so
+the same model code runs in single-device smoke tests and 512-device dry-runs.
+"""
+from __future__ import annotations
+
+import contextlib
+import threading
+from typing import Optional, Sequence
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+_tls = threading.local()
+
+
+def _rules() -> Optional[dict]:
+    return getattr(_tls, "rules", None)
+
+
+@contextlib.contextmanager
+def logical_axis_rules(rules: dict):
+    """rules: logical axis name -> mesh axis (str, tuple, or None)."""
+    old = _rules()
+    _tls.rules = rules
+    try:
+        yield
+    finally:
+        _tls.rules = old
+
+
+def logical_to_pspec(axes: Sequence[Optional[str]], rules=None) -> P:
+    rules = rules if rules is not None else (_rules() or {})
+    return P(*[rules.get(a) if a is not None else None for a in axes])
+
+
+def shard(x: jax.Array, axes: Sequence[Optional[str]]) -> jax.Array:
+    """Constrain activation sharding by logical axes; no-op without rules."""
+    rules = _rules()
+    if not rules:
+        return x
+    spec = logical_to_pspec(axes, rules)
+    if all(s is None for s in spec):
+        return x
+    return jax.lax.with_sharding_constraint(x, spec)
+
+
+# ---------------------------------------------------------------------------
+# initializers
+
+
+def dense_init(key, shape, in_axis=-2, dtype=jnp.float32):
+    """LeCun-normal (fan-in) init used for all projection matrices."""
+    fan_in = shape[in_axis]
+    return (jax.random.normal(key, shape) / jnp.sqrt(fan_in)).astype(dtype)
+
+
+def embed_init(key, shape, dtype=jnp.float32):
+    return (jax.random.normal(key, shape) * 0.02).astype(dtype)
+
+
+# ---------------------------------------------------------------------------
+# norms / activations
+
+
+def rms_norm(x, scale, eps=1e-5):
+    dt = x.dtype
+    x32 = x.astype(jnp.float32)
+    var = jnp.mean(jnp.square(x32), axis=-1, keepdims=True)
+    return (x32 * jax.lax.rsqrt(var + eps)).astype(dt) * scale
+
+
+def layer_norm(x, scale, bias, eps=1e-5):
+    dt = x.dtype
+    x32 = x.astype(jnp.float32)
+    mu = jnp.mean(x32, axis=-1, keepdims=True)
+    var = jnp.var(x32, axis=-1, keepdims=True)
+    y = (x32 - mu) * jax.lax.rsqrt(var + eps)
+    return y.astype(dt) * scale + bias
+
+
+def act_fn(name: str):
+    return {"silu": jax.nn.silu, "gelu": jax.nn.gelu, "relu": jax.nn.relu}[name]
+
+
+def softplus(x):
+    return jax.nn.softplus(x)
+
+
+# ---------------------------------------------------------------------------
+# misc
+
+
+def split_keys(key, n):
+    return list(jax.random.split(key, n))
+
+
+def cast_tree(tree, dtype):
+    return jax.tree.map(
+        lambda x: x.astype(dtype) if jnp.issubdtype(x.dtype, jnp.floating) else x,
+        tree)
+
+
+def param_count(tree) -> int:
+    return sum(int(x.size) for x in jax.tree.leaves(tree))

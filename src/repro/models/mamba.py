@@ -1,0 +1,214 @@
+"""Mamba-2 block with the SSD (state-space duality) chunked algorithm.
+
+Sequence mixing cost is O(S·Q) per head (Q = chunk size) instead of O(S²):
+within a chunk the recurrence is computed as a small dense [Q,Q] masked
+matmul (MXU-friendly — the TPU analogue of the paper's systolic mode), and
+chunks are chained with a `lax.scan` carrying the [B,H,P,N] state. Decode is
+a single recurrence step on O(1) state — the "receptive field decoupled from
+sequence length" property that qualifies SSM archs for the long_500k cell.
+"""
+from __future__ import annotations
+
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import SSMConfig
+from repro.models.common import dense_init, rms_norm, shard, split_keys
+
+
+def dims(d_model: int, ssm: SSMConfig):
+    d_inner = ssm.expand * d_model
+    n_heads = d_inner // ssm.head_dim
+    d_conv_in = d_inner + 2 * ssm.ngroups * ssm.d_state
+    return d_inner, n_heads, d_conv_in
+
+
+def init_mamba(key, d_model: int, ssm: SSMConfig, dtype=jnp.float32):
+    d_inner, H, d_xbc = dims(d_model, ssm)
+    ks = split_keys(key, 4)
+    return {
+        "in_proj": dense_init(ks[0], (d_model, 2 * d_inner
+                                      + 2 * ssm.ngroups * ssm.d_state + H),
+                              dtype=dtype),
+        "conv_w": (jax.random.normal(ks[1], (ssm.d_conv, d_xbc)) * 0.1
+                   ).astype(dtype),
+        "conv_b": jnp.zeros((d_xbc,), dtype),
+        "dt_bias": jnp.zeros((H,), dtype),
+        "A_log": jnp.log(jnp.linspace(1.0, 16.0, H)).astype(dtype),
+        "D": jnp.ones((H,), dtype),
+        "norm": jnp.ones((d_inner,), dtype),
+        "out_proj": dense_init(ks[2], (d_inner, d_model), dtype=dtype),
+    }
+
+
+# ---------------------------------------------------------------------------
+# SSD core
+
+
+def ssd_reference(x, dt, A, B, C):
+    """Naive step-by-step recurrence oracle. x [b,S,H,P]; dt [b,S,H];
+    A [H] (negative); B, C [b,S,H,N]. Returns y [b,S,H,P]."""
+    b, S, H, P = x.shape
+    N = B.shape[-1]
+
+    def step(h, inp):
+        x_t, dt_t, B_t, C_t = inp
+        decay = jnp.exp(dt_t * A)[..., None, None]           # [b,H,1,1]
+        dBx = jnp.einsum("bhn,bhp,bh->bhpn", B_t, x_t, dt_t)
+        h = decay * h + dBx
+        y = jnp.einsum("bhn,bhpn->bhp", C_t, h)
+        return h, y
+
+    h0 = jnp.zeros((b, H, P, N), jnp.float32)
+    xs = (x.swapaxes(0, 1).astype(jnp.float32),
+          dt.swapaxes(0, 1).astype(jnp.float32),
+          B.swapaxes(0, 1).astype(jnp.float32),
+          C.swapaxes(0, 1).astype(jnp.float32))
+    _, ys = jax.lax.scan(step, h0, xs)
+    return ys.swapaxes(0, 1).astype(x.dtype)
+
+
+def ssd_chunked(x, dt, A, B, C, chunk: int, h0=None):
+    """Chunked SSD. Same signature as ssd_reference (S % chunk == 0).
+    Returns (y, final_state [b,H,P,N])."""
+    b, S, H, P = x.shape
+    N = B.shape[-1]
+    nc = S // chunk
+    f32 = jnp.float32
+
+    def rs(t):  # [b,S,...] -> [nc, b, chunk, ...]
+        return t.reshape(b, nc, chunk, *t.shape[2:]).swapaxes(0, 1)
+
+    xs = (rs(x.astype(f32)), rs(dt.astype(f32)), rs(B.astype(f32)),
+          rs(C.astype(f32)))
+
+    def body(state, inp):
+        x_c, dt_c, B_c, C_c = inp                            # [b,Q,H,*]
+        a = dt_c * A                                         # [b,Q,H] (<=0)
+        cum = jnp.cumsum(a, axis=1)                          # inclusive
+        total = cum[:, -1, :]                                # [b,H]
+        # intra-chunk (dense masked matmul — MXU path)
+        CB = jnp.einsum("bqhn,bshn->bhqs", C_c, B_c)
+        diff = (cum.transpose(0, 2, 1)[:, :, :, None]
+                - cum.transpose(0, 2, 1)[:, :, None, :])       # [b,H,Q,S]
+        mask = jnp.tril(jnp.ones((chunk, chunk), bool))
+        # mask BEFORE exp: t<s entries have positive exponents whose inf
+        # would poison gradients through a post-hoc where()
+        L = jnp.exp(jnp.where(mask, diff, -jnp.inf))
+        scores = CB * L * dt_c.transpose(0, 2, 1)[:, :, None, :]
+        y_intra = jnp.einsum("bhqs,bshp->bqhp", scores, x_c)
+        # inter-chunk from carried state
+        y_inter = jnp.einsum("bqhn,bhpn,bqh->bqhp", C_c, state,
+                             jnp.exp(cum))
+        # state update
+        dec_out = jnp.exp(total[:, None, :] - cum) * dt_c    # [b,Q,H]
+        upd = jnp.einsum("bshn,bshp,bsh->bhpn", B_c, x_c, dec_out)
+        state = jnp.exp(total)[:, :, None, None] * state + upd
+        return state, y_intra + y_inter
+
+    if h0 is None:
+        h0 = jnp.zeros((b, H, P, N), f32)
+    state, ys = jax.lax.scan(body, h0, xs)
+    y = ys.swapaxes(0, 1).reshape(b, S, H, P).astype(x.dtype)
+    return y, state
+
+
+def ssd_step(state, x_t, dt_t, A, B_t, C_t):
+    """One decode step. state [b,H,P,N]; x_t [b,H,P]; dt_t [b,H];
+    B_t, C_t [b,H,N]. Returns (state, y [b,H,P])."""
+    f32 = jnp.float32
+    decay = jnp.exp(dt_t.astype(f32) * A)[..., None, None]
+    dBx = jnp.einsum("bhn,bhp,bh->bhpn", B_t.astype(f32), x_t.astype(f32),
+                     dt_t.astype(f32))
+    state = decay * state + dBx
+    y = jnp.einsum("bhn,bhpn->bhp", C_t.astype(f32), state)
+    return state, y.astype(x_t.dtype)
+
+
+# ---------------------------------------------------------------------------
+# full block
+
+
+def _split_proj(params, x, d_model, ssm: SSMConfig):
+    d_inner, H, _ = dims(d_model, ssm)
+    gn = ssm.ngroups * ssm.d_state
+    proj = x @ params["in_proj"]
+    z = proj[..., :d_inner]
+    xbc = proj[..., d_inner:2 * d_inner + 2 * gn]
+    dt_raw = proj[..., 2 * d_inner + 2 * gn:]
+    return z, xbc, dt_raw
+
+
+def _split_xbc(xbc, d_inner, ssm: SSMConfig):
+    gn = ssm.ngroups * ssm.d_state
+    x_ssm = xbc[..., :d_inner]
+    B = xbc[..., d_inner:d_inner + gn]
+    C = xbc[..., d_inner + gn:]
+    return x_ssm, B, C
+
+
+def _bc_heads(t, b, S, H, ssm: SSMConfig):
+    """[..., G*N] -> broadcast groups over heads -> [b,S,H,N]."""
+    G = ssm.ngroups
+    t = t.reshape(b, S, G, ssm.d_state)
+    return jnp.repeat(t, H // G, axis=2)
+
+
+def mamba_block(params, x, d_model: int, ssm: SSMConfig):
+    """Full-sequence mixing. x [B,S,D] -> [B,S,D]."""
+    b, S, _ = x.shape
+    d_inner, H, d_xbc = dims(d_model, ssm)
+    z, xbc, dt_raw = _split_proj(params, x, d_model, ssm)
+    # causal depthwise conv, width d_conv
+    pad = jnp.pad(xbc, ((0, 0), (ssm.d_conv - 1, 0), (0, 0)))
+    conv = sum(pad[:, i:i + S] * params["conv_w"][i]
+               for i in range(ssm.d_conv)) + params["conv_b"]
+    xbc = jax.nn.silu(conv)
+    x_ssm, B, C = _split_xbc(xbc, d_inner, ssm)
+    x_h = x_ssm.reshape(b, S, H, ssm.head_dim)
+    x_h = shard(x_h, ("batch", None, "heads", None))
+    B_h = _bc_heads(B, b, S, H, ssm)
+    C_h = _bc_heads(C, b, S, H, ssm)
+    dt = jax.nn.softplus(dt_raw.astype(jnp.float32) + params["dt_bias"])
+    A = -jnp.exp(params["A_log"].astype(jnp.float32))
+    y, _ = ssd_chunked(x_h, dt, A, B_h, C_h, min(ssm.chunk_size, S))
+    y = y + x_h * params["D"][None, None, :, None]
+    y = y.reshape(b, S, d_inner)
+    y = rms_norm(y * jax.nn.silu(z), params["norm"])
+    return y @ params["out_proj"]
+
+
+def init_mamba_cache(d_model: int, ssm: SSMConfig, batch: int,
+                     dtype=jnp.float32):
+    d_inner, H, d_xbc = dims(d_model, ssm)
+    return {
+        "conv": jnp.zeros((batch, ssm.d_conv - 1, d_xbc), dtype),
+        "ssm": jnp.zeros((batch, H, ssm.head_dim, ssm.d_state), jnp.float32),
+    }
+
+
+def mamba_decode(params, x, cache, d_model: int, ssm: SSMConfig):
+    """One-token step. x [B,1,D] -> ([B,1,D], cache)."""
+    b = x.shape[0]
+    d_inner, H, d_xbc = dims(d_model, ssm)
+    z, xbc, dt_raw = _split_proj(params, x[:, 0], d_model, ssm)
+    window = jnp.concatenate([cache["conv"], xbc[:, None, :]], axis=1)
+    conv = jnp.einsum("bkc,kc->bc", window, params["conv_w"]) + params["conv_b"]
+    new_conv = window[:, 1:]
+    # conv ran in the cache dtype (fp32) -- return to the compute dtype so
+    # the residual stream keeps a stable scan-carry type
+    xbc_a = jax.nn.silu(conv).astype(x.dtype)
+    x_ssm, B, C = _split_xbc(xbc_a, d_inner, ssm)
+    x_h = x_ssm.reshape(b, H, ssm.head_dim)
+    B_h = _bc_heads(B, b, 1, H, ssm)[:, 0]
+    C_h = _bc_heads(C, b, 1, H, ssm)[:, 0]
+    dt = jax.nn.softplus(dt_raw.astype(jnp.float32) + params["dt_bias"])
+    A = -jnp.exp(params["A_log"].astype(jnp.float32))
+    state, y = ssd_step(cache["ssm"], x_h, dt, A, B_h, C_h)
+    y = y + x_h * params["D"][None, :, None]
+    y = y.reshape(b, d_inner)
+    y = rms_norm(y * jax.nn.silu(z), params["norm"])
+    out = (y @ params["out_proj"])[:, None, :]
+    return out, {"conv": new_conv, "ssm": state}

@@ -1,0 +1,156 @@
+"""Multi-head Latent Attention (DeepSeek V2/V3).
+
+KV is compressed into a rank-``r`` latent ``c_kv`` plus a shared rotary key
+``k_rope``; only those are cached at decode (cache is O(S * (r + rope_dim)),
+independent of head count). Decode uses the *absorbed* formulation: W_uk is
+folded into the query and W_uv into the output so per-head K/V are never
+materialized. Prefill/train materialize per-head K/V (cheaper at long Sq).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import MLAConfig
+from repro.models.common import dense_init, rms_norm, shard, split_keys
+from repro.models.rope import apply_rope
+
+NEG_INF = -1e30
+
+
+def init_mla(key, d_model, n_heads, mla: MLAConfig, dtype=jnp.float32):
+    ks = split_keys(key, 8)
+    qk_dim = mla.qk_nope_head_dim + mla.qk_rope_head_dim
+    p = {
+        "w_dkv": dense_init(ks[0], (d_model, mla.kv_lora_rank), dtype=dtype),
+        "w_kr": dense_init(ks[1], (d_model, mla.qk_rope_head_dim), dtype=dtype),
+        "w_uk": dense_init(ks[2], (mla.kv_lora_rank,
+                                   n_heads * mla.qk_nope_head_dim),
+                           in_axis=0, dtype=dtype),
+        "w_uv": dense_init(ks[3], (mla.kv_lora_rank,
+                                   n_heads * mla.v_head_dim),
+                           in_axis=0, dtype=dtype),
+        "wo": dense_init(ks[4], (n_heads * mla.v_head_dim, d_model),
+                         dtype=dtype),
+        "kv_norm": jnp.ones((mla.kv_lora_rank,), dtype),
+    }
+    if mla.q_lora_rank:
+        p["w_dq"] = dense_init(ks[5], (d_model, mla.q_lora_rank), dtype=dtype)
+        p["w_uq"] = dense_init(ks[6], (mla.q_lora_rank, n_heads * qk_dim),
+                               in_axis=0, dtype=dtype)
+        p["q_norm"] = jnp.ones((mla.q_lora_rank,), dtype)
+    else:
+        p["wq"] = dense_init(ks[5], (d_model, n_heads * qk_dim), dtype=dtype)
+    return p
+
+
+def _queries(params, x, n_heads, mla: MLAConfig):
+    B, S, _ = x.shape
+    qk_dim = mla.qk_nope_head_dim + mla.qk_rope_head_dim
+    if "w_dq" in params:
+        q = rms_norm(x @ params["w_dq"], params["q_norm"]) @ params["w_uq"]
+    else:
+        q = x @ params["wq"]
+    q = q.reshape(B, S, n_heads, qk_dim)
+    return q[..., :mla.qk_nope_head_dim], q[..., mla.qk_nope_head_dim:]
+
+
+def mla_full(params, x, *, n_heads, mla: MLAConfig, rope_theta=1e4,
+             causal=True, positions=None, chunk_q: int = 0):
+    """Train / prefill path. Returns (out [B,S,D], (c_kv, k_rope)).
+
+    ``chunk_q`` > 0: online-softmax over query blocks (the [S,S] score
+    tensor is never materialized) — the optimized variant for 32k prefill.
+    """
+    B, S, _ = x.shape
+    nope, rope_d, vd = mla.qk_nope_head_dim, mla.qk_rope_head_dim, mla.v_head_dim
+    if positions is None:
+        positions = jnp.arange(S)[None, :]
+    q_nope, q_rope = _queries(params, x, n_heads, mla)
+    q_rope = apply_rope(q_rope, positions, rope_theta)
+    c_kv = rms_norm(x @ params["w_dkv"], params["kv_norm"])     # [B,S,r]
+    k_rope = apply_rope((x @ params["w_kr"])[:, :, None, :],
+                        positions, rope_theta)                   # [B,S,1,rd]
+    k_nope = (c_kv @ params["w_uk"]).reshape(B, S, n_heads, nope)
+    v = (c_kv @ params["w_uv"]).reshape(B, S, n_heads, vd)
+    q_nope = shard(q_nope, ("batch", None, "heads", None))
+    k_nope = shard(k_nope, ("batch", None, "heads", None))
+    scale = 1.0 / jnp.sqrt(jnp.float32(nope + rope_d))
+
+    if chunk_q and S > chunk_q and S % chunk_q == 0:
+        bq = chunk_q
+        assert S % bq == 0
+        kr = k_rope[:, :, 0, :]
+
+        def one_block(i):
+            qs = jax.lax.dynamic_slice_in_dim(q_nope, i * bq, bq, 1)
+            qr = jax.lax.dynamic_slice_in_dim(q_rope, i * bq, bq, 1)
+            sb = (jnp.einsum("bqhd,bshd->bhqs", qs, k_nope,
+                             preferred_element_type=jnp.float32)
+                  + jnp.einsum("bqhd,bsd->bhqs", qr, kr,
+                               preferred_element_type=jnp.float32)) * scale
+            if causal:
+                rows = i * bq + jnp.arange(bq)
+                mask = rows[:, None] >= jnp.arange(S)[None, :]
+                sb = jnp.where(mask[None, None], sb, NEG_INF)
+            m = jnp.max(sb, axis=-1, keepdims=True)
+            pb = jnp.exp(sb - m)
+            num = jnp.einsum("bhqs,bshd->bqhd", pb.astype(v.dtype), v)
+            den = jnp.sum(pb, axis=-1).astype(v.dtype)  # [B,h,q]
+            return num / jnp.maximum(den.transpose(0, 2, 1)[..., None],
+                                     1e-20)
+
+        ob = jax.lax.map(one_block, jnp.arange(S // bq))
+        o = ob.transpose(1, 0, 2, 3, 4).reshape(B, S, n_heads, vd)
+    else:
+        s = (jnp.einsum("bqhd,bshd->bhqs", q_nope, k_nope,
+                        preferred_element_type=jnp.float32)
+             + jnp.einsum("bqhd,bsxd->bhqs", q_rope,
+                          k_rope, preferred_element_type=jnp.float32)) * scale
+        if causal:
+            mask = jnp.tril(jnp.ones((S, S), bool))
+            s = jnp.where(mask, s, NEG_INF)
+        p = jax.nn.softmax(s, axis=-1)
+        o = jnp.einsum("bhqs,bshd->bqhd", p.astype(v.dtype), v)
+    o = shard(o, ("batch", None, "heads", None))
+    out = o.reshape(B, S, n_heads * vd) @ params["wo"]
+    return out, (c_kv, k_rope[:, :, 0, :])
+
+
+def mla_decode(params, x, ckv_cache, krope_cache, pos, *, n_heads,
+               mla: MLAConfig, rope_theta=1e4):
+    """Absorbed one-token decode.
+
+    x [B,1,D]; ckv_cache [B,S,r]; krope_cache [B,S,rope_dim]; pos scalar.
+    Returns (out [B,1,D], ckv_cache, krope_cache).
+    """
+    B = x.shape[0]
+    S = ckv_cache.shape[1]
+    nope, rope_d, vd = mla.qk_nope_head_dim, mla.qk_rope_head_dim, mla.v_head_dim
+    r = mla.kv_lora_rank
+    posv = jnp.full((B, 1), pos, jnp.int32)
+    q_nope, q_rope = _queries(params, x, n_heads, mla)
+    q_rope = apply_rope(q_rope, posv, rope_theta)                # [B,1,H,rd]
+    c_kv = rms_norm(x @ params["w_dkv"], params["kv_norm"])      # [B,1,r]
+    k_rope = apply_rope((x @ params["w_kr"])[:, :, None, :], posv,
+                        rope_theta)[:, :, 0, :]                  # [B,1,rd]
+    ckv_cache = jax.lax.dynamic_update_slice(
+        ckv_cache, c_kv.astype(ckv_cache.dtype), (0, pos, 0))
+    krope_cache = jax.lax.dynamic_update_slice(
+        krope_cache, k_rope.astype(krope_cache.dtype), (0, pos, 0))
+    # absorb W_uk into q: q_lat [B,1,H,r]
+    w_uk = params["w_uk"].reshape(r, n_heads, nope)
+    q_lat = jnp.einsum("bqhd,rhd->bqhr", q_nope, w_uk)
+    scale = 1.0 / jnp.sqrt(jnp.float32(nope + rope_d))
+    s = (jnp.einsum("bqhr,bsr->bhqs", q_lat, ckv_cache,
+                    preferred_element_type=jnp.float32)
+         + jnp.einsum("bqhd,bsd->bhqs", q_rope, krope_cache,
+                      preferred_element_type=jnp.float32)) * scale
+    valid = (jnp.arange(S) <= pos)[None, None, None, :]
+    s = jnp.where(valid, s, NEG_INF)
+    p = jax.nn.softmax(s, axis=-1)
+    ctx = jnp.einsum("bhqs,bsr->bqhr", p.astype(ckv_cache.dtype), ckv_cache)
+    w_uv = params["w_uv"].reshape(r, n_heads, vd)
+    o = jnp.einsum("bqhr,rhd->bqhd", ctx, w_uv)
+    out = o.reshape(B, 1, n_heads * vd) @ params["wo"]
+    return out, ckv_cache, krope_cache

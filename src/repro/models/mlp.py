@@ -1,0 +1,34 @@
+"""Feed-forward blocks: SwiGLU (llama-family) and plain GELU MLP (whisper)."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+from repro.models.common import act_fn, dense_init, shard, split_keys
+
+
+def init_mlp(key, d_model, d_ff, act="silu", dtype=jnp.float32):
+    ks = split_keys(key, 3)
+    if act == "silu":                     # SwiGLU: gate/up/down
+        return {
+            "w_gate": dense_init(ks[0], (d_model, d_ff), dtype=dtype),
+            "w_up": dense_init(ks[1], (d_model, d_ff), dtype=dtype),
+            "w_down": dense_init(ks[2], (d_ff, d_model), dtype=dtype),
+        }
+    return {                               # plain 2-layer MLP
+        "w_in": dense_init(ks[0], (d_model, d_ff), dtype=dtype),
+        "b_in": jnp.zeros((d_ff,), dtype),
+        "w_out": dense_init(ks[1], (d_ff, d_model), dtype=dtype),
+        "b_out": jnp.zeros((d_model,), dtype),
+    }
+
+
+def mlp(params, x, act="silu"):
+    f = act_fn(act)
+    axes = ("batch",) + (None,) * (x.ndim - 2) + ("ff",)
+    if "w_gate" in params:
+        h = f(x @ params["w_gate"]) * (x @ params["w_up"])
+        h = shard(h, axes)
+        return h @ params["w_down"]
+    h = f(x @ params["w_in"] + params["b_in"])
+    h = shard(h, axes)
+    return h @ params["w_out"] + params["b_out"]

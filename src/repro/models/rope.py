@@ -1,0 +1,33 @@
+"""Rotary position embedding with partial-fraction support.
+
+``rope_fraction`` < 1.0 rotates only the first ``fraction * head_dim`` dims
+(chatglm3's "2d rope" applies rotary to half the head dim); fraction 0 is a
+no-op (whisper uses learned absolute positions).
+"""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def rope_freqs(rot_dim: int, theta: float, dtype=jnp.float32):
+    return 1.0 / (theta ** (jnp.arange(0, rot_dim, 2, dtype=dtype) / rot_dim))
+
+
+def apply_rope(x, positions, theta: float = 10000.0, fraction: float = 1.0):
+    """x: [..., S, H, D]; positions: broadcastable to [..., S]."""
+    if fraction <= 0.0:
+        return x
+    d = x.shape[-1]
+    rot = int(d * fraction)
+    rot -= rot % 2
+    if rot == 0:
+        return x
+    x_rot, x_pass = x[..., :rot], x[..., rot:]
+    freqs = rope_freqs(rot, theta)                       # [rot/2]
+    angles = positions[..., None, None].astype(jnp.float32) * freqs  # [...,S,1,rot/2]
+    cos, sin = jnp.cos(angles), jnp.sin(angles)
+    x1, x2 = x_rot[..., 0::2], x_rot[..., 1::2]
+    r1 = x1 * cos - x2 * sin
+    r2 = x2 * cos + x1 * sin
+    out = jnp.stack([r1, r2], axis=-1).reshape(x_rot.shape)
+    return jnp.concatenate([out.astype(x.dtype), x_pass], axis=-1)

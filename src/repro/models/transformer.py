@@ -1,0 +1,596 @@
+"""Model assembly for every assigned architecture family.
+
+One functional API:
+  init_params(cfg, key, max_seq)         -> params pytree
+  train_logits(cfg, params, batch)       -> (logits [B,S,V], aux)
+  prefill(cfg, params, batch)            -> (logits [B,S,V], cache)
+  decode_step(cfg, params, cache, token, pos) -> (logits [B,1,V], cache)
+  init_cache / cache_specs               -> decode-cache pytrees
+
+Layer stacks are `lax.scan` over parameters stacked on axis 0 so HLO size and
+compile time stay bounded for 28–72-layer models on a 512-device dry-run
+mesh. Heterogeneous stacks (deepseek dense-first-k, jamba 8-layer periods)
+use one scan per homogeneous segment (period bodies are unrolled in Python).
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models import mamba as mb
+from repro.models.attention import (cross_attention, cross_kv,
+                                    decode_attention, full_attention,
+                                    init_attn)
+from repro.models.common import (cast_tree, dense_init, embed_init,
+                                 layer_norm, rms_norm, shard, split_keys)
+from repro.models.mla import init_mla, mla_decode, mla_full
+from repro.models.mlp import init_mlp, mlp
+from repro.models.moe import init_moe, moe_apply
+
+
+def _pdt(cfg: ModelConfig):
+    return jnp.dtype(cfg.dtype.param_dtype)
+
+
+def _cdt(cfg: ModelConfig):
+    return jnp.dtype(cfg.dtype.compute_dtype)
+
+
+# ---------------------------------------------------------------------------
+# layer kinds
+
+
+def _is_moe_layer(cfg: ModelConfig, idx: int) -> bool:
+    if cfg.moe is None:
+        return False
+    m = cfg.moe
+    if m.layout == "every":
+        return True
+    if m.layout == "alternate":
+        return idx % 2 == 1
+    if m.layout == "dense_first_k":
+        return idx >= m.dense_first_k
+    raise ValueError(m.layout)
+
+
+def _jamba_is_attn(cfg: ModelConfig, idx: int) -> bool:
+    # 1 attention layer per period, in the middle of the period
+    return idx % cfg.hybrid_attn_period == cfg.hybrid_attn_period // 2
+
+
+# ---------------------------------------------------------------------------
+# single-layer init / apply
+
+
+def _init_block(cfg: ModelConfig, key, kind: str):
+    """kind: dense | moe | mamba | enc | dec"""
+    dt = _pdt(cfg)
+    D, H, Kh, Dh = (cfg.d_model, cfg.n_heads, cfg.n_kv_heads,
+                    cfg.resolved_head_dim)
+    ks = split_keys(key, 4)
+    p: Dict[str, Any] = {"ln1": jnp.ones((D,), dt)}
+    if cfg.family == "audio":
+        p["ln1_b"] = jnp.zeros((D,), dt)
+    if kind == "mamba":
+        p["mixer"] = mb.init_mamba(ks[0], D, cfg.ssm, dt)
+        if cfg.family == "ssm":      # pure mamba: no separate FFN
+            return p
+    elif kind in ("dense", "moe", "enc", "dec"):
+        if cfg.mla is not None and kind not in ("enc",):
+            p["mixer"] = init_mla(ks[0], D, H, cfg.mla, dt)
+        else:
+            p["mixer"] = init_attn(ks[0], D, H, Kh, Dh, cfg.qkv_bias, dt)
+    p["ln2"] = jnp.ones((D,), dt)
+    if cfg.family == "audio":
+        p["ln2_b"] = jnp.zeros((D,), dt)
+    if kind == "dec":                # whisper decoder: cross-attention
+        p["cross"] = init_attn(ks[2], D, H, Kh, Dh, cfg.qkv_bias, dt)
+        p["ln3"] = jnp.ones((D,), dt)
+        p["ln3_b"] = jnp.zeros((D,), dt)
+    if kind == "moe":
+        p["ffn"] = init_moe(ks[1], D, cfg.moe, dt)
+    elif kind != "mamba" or cfg.family != "ssm":
+        p["ffn"] = init_mlp(ks[1], D, cfg.d_ff, cfg.act, dt)
+    return p
+
+
+def _cast_block(cfg, bp):
+    """Mixed precision: bf16 compute against fp32 master params. The cast
+    happens inside the scan body so the residual carry keeps compute dtype.
+    The MoE router is re-cast to fp32 inside route()."""
+    return cast_tree(bp, _cdt(cfg))
+
+
+def _apply_mixer_full(cfg, bp, h, kind):
+    bp = _cast_block(cfg, bp)
+    x = _norm_in(cfg, bp, h, "ln1")
+    if kind == "mamba":
+        return h + mb.mamba_block(bp["mixer"], x, cfg.d_model, cfg.ssm)
+    if cfg.mla is not None:
+        out, _ = mla_full(bp["mixer"], x, n_heads=cfg.n_heads, mla=cfg.mla,
+                          rope_theta=cfg.rope_theta, causal=(kind != "enc"),
+                          chunk_q=cfg.attn_chunk_q)
+        return h + out
+    out = full_attention(bp["mixer"], x, n_heads=cfg.n_heads,
+                         n_kv=cfg.n_kv_heads, head_dim=cfg.resolved_head_dim,
+                         rope_theta=cfg.rope_theta,
+                         rope_fraction=cfg.rope_fraction,
+                         causal=(kind != "enc"),
+                         chunk_q=cfg.attn_chunk_q)
+    return h + out
+
+
+def _norm_in(cfg, bp, h, name):
+    if cfg.family == "audio":
+        return layer_norm(h, bp[name], bp[name + "_b"], cfg.norm_eps)
+    return rms_norm(h, bp[name], cfg.norm_eps)
+
+
+def _apply_ffn(cfg, bp, h, kind, aux):
+    if "ffn" not in bp:
+        return h, aux
+    bp = _cast_block(cfg, bp)
+    x = _norm_in(cfg, bp, h, "ln2")
+    if kind == "moe":
+        out, a = moe_apply(bp["ffn"], x, cfg.moe, act=cfg.act)
+        return h + out, aux + a
+    return h + mlp(bp["ffn"], x, cfg.act), aux
+
+
+def _block_full(cfg, bp, h, aux, kind):
+    h = shard(h, ("batch", None, None))
+    h = _apply_mixer_full(cfg, bp, h, kind)
+    h, aux = _apply_ffn(cfg, bp, h, kind, aux)
+    return h, aux
+
+
+# ---------------------------------------------------------------------------
+# parameter init
+
+
+def _stack_init(fn, key, n):
+    return jax.vmap(fn)(jax.random.split(key, n))
+
+
+def init_params(cfg: ModelConfig, key, max_seq: int = 4096):
+    dt = _pdt(cfg)
+    ks = split_keys(key, 10)
+    p: Dict[str, Any] = {
+        "embed": embed_init(ks[0], (cfg.vocab_size, cfg.d_model), dt),
+        "final_norm": jnp.ones((cfg.d_model,), dt),
+    }
+    if not cfg.tie_embeddings:
+        p["lm_head"] = dense_init(ks[1], (cfg.d_model, cfg.vocab_size),
+                                  dtype=dt)
+    if cfg.family == "audio":
+        p["final_norm_b"] = jnp.zeros((cfg.d_model,), dt)
+        p["pos_emb"] = embed_init(ks[2], (max_seq, cfg.d_model), dt)
+        p["enc_pos_emb"] = embed_init(ks[3], (cfg.encoder.n_frames,
+                                              cfg.d_model), dt)
+        p["enc_blocks"] = _stack_init(
+            lambda k: _init_block(cfg, k, "enc"), ks[4], cfg.encoder.n_layers)
+        p["enc_norm"] = jnp.ones((cfg.d_model,), dt)
+        p["enc_norm_b"] = jnp.zeros((cfg.d_model,), dt)
+        p["blocks"] = _stack_init(
+            lambda k: _init_block(cfg, k, "dec"), ks[5], cfg.n_layers)
+        return p
+    if cfg.family == "ssm":
+        p["blocks"] = _stack_init(
+            lambda k: _init_block(cfg, k, "mamba"), ks[4], cfg.n_layers)
+        return p
+    if cfg.hybrid_attn_period:      # jamba: stack of unrolled periods
+        per = cfg.hybrid_attn_period
+        n_per = cfg.n_layers // per
+
+        # mixer kind and ffn kind are orthogonal in jamba, so build blocks
+        # explicitly: mixer from _init_block, then override the ffn.
+        def init_period(k):
+            kk = split_keys(k, per)
+            out = {}
+            for i in range(per):
+                kind = "dense" if _jamba_is_attn(cfg, i) else "mamba"
+                bp = _init_block(cfg, kk[i], kind)
+                if _is_moe_layer(cfg, i):
+                    bp["ffn"] = init_moe(jax.random.fold_in(kk[i], 7),
+                                         cfg.d_model, cfg.moe, dt)
+                else:
+                    bp["ffn"] = init_mlp(jax.random.fold_in(kk[i], 7),
+                                         cfg.d_model, cfg.d_ff, cfg.act, dt)
+                bp["ln2"] = jnp.ones((cfg.d_model,), dt)
+                out[f"l{i}"] = bp
+            return out
+
+        p["blocks"] = _stack_init(init_period, ks[4], n_per)
+        return p
+    if cfg.moe is not None and cfg.moe.dense_first_k:
+        k_dense = cfg.moe.dense_first_k
+        p["dense_blocks"] = _stack_init(
+            lambda k: _init_block(cfg, k, "dense"), ks[4], k_dense)
+        p["blocks"] = _stack_init(
+            lambda k: _init_block(cfg, k, "moe"), ks[5],
+            cfg.n_layers - k_dense)
+    else:
+        kind = "moe" if (cfg.moe is not None) else "dense"
+        p["blocks"] = _stack_init(
+            lambda k: _init_block(cfg, k, kind), ks[4], cfg.n_layers)
+    if cfg.mtp:                      # deepseek-v3 multi-token-prediction
+        p["mtp"] = {
+            "proj": dense_init(ks[6], (2 * cfg.d_model, cfg.d_model),
+                               dtype=dt),
+            "block": _init_block(cfg, ks[7], "dense"),
+            "norm_h": jnp.ones((cfg.d_model,), dt),
+            "norm_e": jnp.ones((cfg.d_model,), dt),
+        }
+    return p
+
+
+# ---------------------------------------------------------------------------
+# forward (train / prefill)
+
+
+def _scan_blocks(cfg, stack, h, kind, remat=False):
+    def body(carry, bp):
+        h, aux = carry
+        h, aux = _block_full(cfg, bp, h, aux, kind)
+        return (h, aux), None
+
+    if remat:
+        body = jax.checkpoint(body,
+                              policy=jax.checkpoint_policies.nothing_saveable)
+    (h, aux), _ = jax.lax.scan(body, (h, jnp.float32(0.0)), stack)
+    return h, aux
+
+
+def _jamba_forward(cfg, params, h, remat=False):
+    per = cfg.hybrid_attn_period
+
+    def body(carry, pp):
+        h, aux = carry
+        for i in range(per):
+            kind = "dense" if _jamba_is_attn(cfg, i) else "mamba"
+            fkind = "moe" if _is_moe_layer(cfg, i) else kind
+            bp = pp[f"l{i}"]
+            h = _apply_mixer_full(cfg, bp, h, kind)
+            h, aux = _apply_ffn(cfg, bp, h, fkind, aux)
+        return (h, aux), None
+
+    if remat:
+        body = jax.checkpoint(body,
+                              policy=jax.checkpoint_policies.nothing_saveable)
+    (h, aux), _ = jax.lax.scan(body, (h, jnp.float32(0.0)), params["blocks"])
+    return h, aux
+
+
+def _encode(cfg, params, frames):
+    """Whisper encoder over precomputed frame embeddings [B,T,D]."""
+    h = (frames.astype(_cdt(cfg))
+         + params["enc_pos_emb"][None].astype(_cdt(cfg)))
+    h, _ = _scan_blocks(cfg, params["enc_blocks"], h, "enc")
+    return layer_norm(h, params["enc_norm"], params["enc_norm_b"],
+                      cfg.norm_eps).astype(_cdt(cfg))
+
+
+def _embed_tokens(cfg, params, tokens):
+    return params["embed"][tokens].astype(_cdt(cfg))
+
+
+def _unembed(cfg, params, h):
+    w = params.get("lm_head")
+    if w is None:
+        w = params["embed"].T
+    h = shard(h, ("batch", None, None))
+    logits = jnp.einsum("bsd,dv->bsv", h, w.astype(_cdt(cfg)),
+                        preferred_element_type=jnp.float32)
+    return shard(logits, ("batch", None, "vocab"))
+
+
+def backbone(cfg: ModelConfig, params, batch, remat=False):
+    """Token embeddings -> final hidden states. batch is a dict with
+    'tokens' [B,S] plus family extras ('frames', 'patch_embeds')."""
+    tokens = batch["tokens"]
+    h = _embed_tokens(cfg, params, tokens)
+    if cfg.family == "vlm":
+        pe = batch["patch_embeds"].astype(h.dtype)  # [B,P,D] stub frontend
+        h = jax.lax.dynamic_update_slice(h, pe, (0, 0, 0))
+    if cfg.family == "audio":
+        S = tokens.shape[1]
+        h = h + params["pos_emb"][None, :S].astype(h.dtype)
+        enc = _encode(cfg, params, batch["frames"])
+        h, aux = _whisper_decode_full(cfg, params, h, enc, remat)
+        h = layer_norm(h, params["final_norm"], params["final_norm_b"],
+                       cfg.norm_eps)
+        return h, aux
+    if cfg.family == "ssm":
+        h, aux = _scan_blocks(cfg, params["blocks"], h, "mamba", remat)
+    elif cfg.hybrid_attn_period:
+        h, aux = _jamba_forward(cfg, params, h, remat)
+    elif cfg.moe is not None and cfg.moe.dense_first_k:
+        h, _ = _scan_blocks(cfg, params["dense_blocks"], h, "dense", remat)
+        h, aux = _scan_blocks(cfg, params["blocks"], h, "moe", remat)
+    elif cfg.moe is not None:
+        h, aux = _scan_blocks(cfg, params["blocks"], h, "moe", remat)
+    else:
+        h, aux = _scan_blocks(cfg, params["blocks"], h, "dense", remat)
+    h = rms_norm(h, params["final_norm"], cfg.norm_eps)
+    return h, aux
+
+
+def _whisper_decode_full(cfg, params, h, enc, remat=False):
+    def body(carry, bp):
+        h, aux = carry
+        bp = _cast_block(cfg, bp)
+        x = layer_norm(h, bp["ln1"], bp["ln1_b"], cfg.norm_eps)
+        h = h + full_attention(bp["mixer"], x, n_heads=cfg.n_heads,
+                               n_kv=cfg.n_kv_heads,
+                               head_dim=cfg.resolved_head_dim,
+                               rope_fraction=0.0, causal=True,
+                               chunk_q=cfg.attn_chunk_q)
+        x = layer_norm(h, bp["ln3"], bp["ln3_b"], cfg.norm_eps)
+        kv = cross_kv(bp["cross"], enc, n_kv=cfg.n_kv_heads,
+                      head_dim=cfg.resolved_head_dim)
+        h = h + cross_attention(bp["cross"], x, kv, n_heads=cfg.n_heads,
+                                n_kv=cfg.n_kv_heads,
+                                head_dim=cfg.resolved_head_dim)
+        x = layer_norm(h, bp["ln2"], bp["ln2_b"], cfg.norm_eps)
+        h = h + mlp(bp["ffn"], x, cfg.act)
+        return (h, aux), None
+
+    if remat:
+        body = jax.checkpoint(body,
+                              policy=jax.checkpoint_policies.nothing_saveable)
+    (h, aux), _ = jax.lax.scan(body, (h, jnp.float32(0.0)), params["blocks"])
+    return h, aux
+
+
+def train_logits(cfg: ModelConfig, params, batch, remat=True):
+    h, aux = backbone(cfg, params, batch, remat)
+    logits = _unembed(cfg, params, h)
+    extras = {"aux_loss": aux}
+    if cfg.mtp and "mtp" in params:
+        mp = params["mtp"]
+        # predict token t+2 from hidden t combined with embedding of t+1
+        emb_next = jnp.roll(_embed_tokens(cfg, params, batch["tokens"]),
+                            -1, axis=1)
+        x = jnp.concatenate(
+            [rms_norm(h, mp["norm_h"].astype(h.dtype), cfg.norm_eps),
+             rms_norm(emb_next, mp["norm_e"].astype(h.dtype), cfg.norm_eps)],
+            axis=-1) @ mp["proj"].astype(h.dtype)
+        x, _ = _block_full(cfg, mp["block"], x, jnp.float32(0.0), "dense")
+        extras["mtp_logits"] = _unembed(cfg, params, x)
+    return logits, extras
+
+
+# ---------------------------------------------------------------------------
+# decode: cache init + one-token step
+
+CACHE_DTYPE = jnp.bfloat16
+
+
+def init_cache(cfg: ModelConfig, batch: int, max_seq: int,
+               mode: str = "zeros"):
+    """Decode cache pytree; mode='specs' returns ShapeDtypeStructs."""
+    mk = (jax.ShapeDtypeStruct if mode == "specs"
+          else lambda s, d: jnp.zeros(s, d))
+    Dh = cfg.resolved_head_dim
+
+    def attn_cache(n_layers):
+        return {"k": mk((n_layers, batch, max_seq, cfg.n_kv_heads, Dh),
+                        CACHE_DTYPE),
+                "v": mk((n_layers, batch, max_seq, cfg.n_kv_heads, Dh),
+                        CACHE_DTYPE)}
+
+    def mla_cache(n_layers):
+        return {"ckv": mk((n_layers, batch, max_seq, cfg.mla.kv_lora_rank),
+                          CACHE_DTYPE),
+                "kr": mk((n_layers, batch, max_seq,
+                          cfg.mla.qk_rope_head_dim), CACHE_DTYPE)}
+
+    def mamba_cache(n_layers):
+        d_inner, H, d_xbc = mb.dims(cfg.d_model, cfg.ssm)
+        return {"conv": mk((n_layers, batch, cfg.ssm.d_conv - 1, d_xbc),
+                           CACHE_DTYPE),
+                "ssm": mk((n_layers, batch, H, cfg.ssm.head_dim,
+                           cfg.ssm.d_state), jnp.float32)}
+
+    if cfg.family == "audio":
+        return {"self": attn_cache(cfg.n_layers),
+                "cross_k": mk((cfg.n_layers, batch, cfg.encoder.n_frames,
+                               cfg.n_kv_heads, Dh), CACHE_DTYPE),
+                "cross_v": mk((cfg.n_layers, batch, cfg.encoder.n_frames,
+                               cfg.n_kv_heads, Dh), CACHE_DTYPE)}
+    if cfg.family == "ssm":
+        return {"mamba": mamba_cache(cfg.n_layers)}
+    if cfg.hybrid_attn_period:
+        per = cfg.hybrid_attn_period
+        n_per = cfg.n_layers // per
+        d_inner, H, d_xbc = mb.dims(cfg.d_model, cfg.ssm)
+        return {
+            "attn": attn_cache(n_per),
+            "conv": mk((n_per, per - 1, batch, cfg.ssm.d_conv - 1, d_xbc),
+                       CACHE_DTYPE),
+            "ssm": mk((n_per, per - 1, batch, H, cfg.ssm.head_dim,
+                       cfg.ssm.d_state), jnp.float32),
+        }
+    if cfg.mla is not None:
+        if cfg.moe is not None and cfg.moe.dense_first_k:
+            return {"dense": mla_cache(cfg.moe.dense_first_k),
+                    "moe": mla_cache(cfg.n_layers - cfg.moe.dense_first_k)}
+        return {"moe": mla_cache(cfg.n_layers)}
+    return {"attn": attn_cache(cfg.n_layers)}
+
+
+def _decode_attn_block(cfg, bp, h, kc, vc, pos, kind="dense"):
+    bp = _cast_block(cfg, bp)
+    x = _norm_in(cfg, bp, h, "ln1")
+    out, kc, vc = decode_attention(
+        bp["mixer"], x, kc, vc, pos, n_heads=cfg.n_heads,
+        n_kv=cfg.n_kv_heads, head_dim=cfg.resolved_head_dim,
+        rope_theta=cfg.rope_theta, rope_fraction=cfg.rope_fraction)
+    h = h + out
+    h, _ = _apply_ffn(cfg, bp, h, kind, jnp.float32(0.0))
+    return h, kc, vc
+
+
+def _decode_mla_block(cfg, bp, h, ckv, kr, pos, kind):
+    bp = _cast_block(cfg, bp)
+    x = _norm_in(cfg, bp, h, "ln1")
+    out, ckv, kr = mla_decode(bp["mixer"], x, ckv, kr, pos,
+                              n_heads=cfg.n_heads, mla=cfg.mla,
+                              rope_theta=cfg.rope_theta)
+    h = h + out
+    h, _ = _apply_ffn(cfg, bp, h, kind, jnp.float32(0.0))
+    return h, ckv, kr
+
+
+def _decode_mamba_block(cfg, bp, h, cache, kind="mamba"):
+    bp = _cast_block(cfg, bp)
+    x = _norm_in(cfg, bp, h, "ln1")
+    out, cache = mb.mamba_decode(
+        bp["mixer"], x,
+        {"conv": cache["conv"].astype(jnp.float32), "ssm": cache["ssm"]},
+        cfg.d_model, cfg.ssm)
+    h = h + out
+    h, _ = _apply_ffn(cfg, bp, h, kind, jnp.float32(0.0))
+    return h, {"conv": cache["conv"].astype(CACHE_DTYPE),
+               "ssm": cache["ssm"]}
+
+
+def decode_step(cfg: ModelConfig, params, cache, token, pos):
+    """token [B,1] int32; pos scalar int32. Returns (logits [B,1,V], cache)."""
+    h = _embed_tokens(cfg, params, token)
+    new_cache = dict(cache)
+
+    if cfg.family == "audio":
+        h = h + jax.lax.dynamic_slice_in_dim(params["pos_emb"], pos, 1)[None]
+
+        def body(hh, xs):
+            bp, kc, vc, ck, cv = xs
+            bp = _cast_block(cfg, bp)
+            x = layer_norm(hh, bp["ln1"], bp["ln1_b"], cfg.norm_eps)
+            out, kc, vc = decode_attention(
+                bp["mixer"], x, kc, vc, pos, n_heads=cfg.n_heads,
+                n_kv=cfg.n_kv_heads, head_dim=cfg.resolved_head_dim,
+                rope_fraction=0.0)
+            hh = hh + out
+            x = layer_norm(hh, bp["ln3"], bp["ln3_b"], cfg.norm_eps)
+            hh = hh + cross_attention(bp["cross"], x, (ck, cv),
+                                      n_heads=cfg.n_heads,
+                                      n_kv=cfg.n_kv_heads,
+                                      head_dim=cfg.resolved_head_dim)
+            x = layer_norm(hh, bp["ln2"], bp["ln2_b"], cfg.norm_eps)
+            hh = hh + mlp(bp["ffn"], x, cfg.act)
+            return hh, (kc, vc)
+
+        h, (ks, vs) = jax.lax.scan(
+            body, h, (params["blocks"], cache["self"]["k"],
+                      cache["self"]["v"], cache["cross_k"],
+                      cache["cross_v"]))
+        new_cache["self"] = {"k": ks, "v": vs}
+        h = layer_norm(h, params["final_norm"], params["final_norm_b"],
+                       cfg.norm_eps)
+        return _unembed(cfg, params, h), new_cache
+
+    if cfg.family == "ssm":
+        def body(hh, xs):
+            bp, conv, ssm = xs
+            hh, c = _decode_mamba_block(cfg, bp, hh,
+                                        {"conv": conv, "ssm": ssm})
+            return hh, (c["conv"], c["ssm"])
+
+        h, (convs, ssms) = jax.lax.scan(
+            body, h, (params["blocks"], cache["mamba"]["conv"],
+                      cache["mamba"]["ssm"]))
+        new_cache["mamba"] = {"conv": convs, "ssm": ssms}
+
+    elif cfg.hybrid_attn_period:
+        per = cfg.hybrid_attn_period
+
+        def body(hh, xs):
+            pp, kc, vc, convs, ssms = xs
+            new_conv, new_ssm = [], []
+            mi = 0
+            for i in range(per):
+                bp = pp[f"l{i}"]
+                fkind = "moe" if _is_moe_layer(cfg, i) else "dense"
+                if _jamba_is_attn(cfg, i):
+                    hh, kc, vc = _decode_attn_block(cfg, bp, hh, kc, vc,
+                                                    pos, fkind)
+                else:
+                    hh, c = _decode_mamba_block(
+                        cfg, bp, hh, {"conv": convs[mi], "ssm": ssms[mi]},
+                        fkind)
+                    new_conv.append(c["conv"])
+                    new_ssm.append(c["ssm"])
+                    mi += 1
+            return hh, (kc, vc, jnp.stack(new_conv), jnp.stack(new_ssm))
+
+        h, (ks, vs, convs, ssms) = jax.lax.scan(
+            body, h, (params["blocks"], cache["attn"]["k"],
+                      cache["attn"]["v"], cache["conv"], cache["ssm"]))
+        new_cache["attn"] = {"k": ks, "v": vs}
+        new_cache["conv"], new_cache["ssm"] = convs, ssms
+
+    elif cfg.mla is not None:
+        def run(stack, cch, kind):
+            def body(hh, xs):
+                bp, ckv, kr = xs
+                hh, ckv, kr = _decode_mla_block(cfg, bp, hh, ckv, kr, pos,
+                                                kind)
+                return hh, (ckv, kr)
+            return jax.lax.scan(body, h, (stack, cch["ckv"], cch["kr"]))
+
+        hh = h
+        if "dense" in cache:
+            hh, (ckvs, krs) = run(params["dense_blocks"], cache["dense"],
+                                  "dense")
+            new_cache["dense"] = {"ckv": ckvs, "kr": krs}
+
+            def body(hhh, xs):
+                bp, ckv, kr = xs
+                hhh, ckv, kr = _decode_mla_block(cfg, bp, hhh, ckv, kr, pos,
+                                                 "moe")
+                return hhh, (ckv, kr)
+            hh, (ckvs, krs) = jax.lax.scan(
+                body, hh, (params["blocks"], cache["moe"]["ckv"],
+                           cache["moe"]["kr"]))
+        else:
+            def body(hhh, xs):
+                bp, ckv, kr = xs
+                kind = "moe" if cfg.moe is not None else "dense"
+                hhh, ckv, kr = _decode_mla_block(cfg, bp, hhh, ckv, kr, pos,
+                                                 kind)
+                return hhh, (ckv, kr)
+            hh, (ckvs, krs) = jax.lax.scan(
+                body, hh, (params["blocks"], cache["moe"]["ckv"],
+                           cache["moe"]["kr"]))
+        new_cache["moe"] = {"ckv": ckvs, "kr": krs}
+        h = hh
+
+    else:
+        kind = "moe" if cfg.moe is not None else "dense"
+
+        def body(hh, xs):
+            bp, kc, vc = xs
+            hh, kc, vc = _decode_attn_block(cfg, bp, hh, kc, vc, pos, kind)
+            return hh, (kc, vc)
+
+        h, (ks, vs) = jax.lax.scan(
+            body, h, (params["blocks"], cache["attn"]["k"],
+                      cache["attn"]["v"]))
+        new_cache["attn"] = {"k": ks, "v": vs}
+
+    h = rms_norm(h, params["final_norm"], cfg.norm_eps)
+    return _unembed(cfg, params, h), new_cache
+
+
+def prefill(cfg: ModelConfig, params, batch):
+    """Full-sequence forward producing logits; used for the prefill shape
+    cell. (Cache population during prefill is exercised at small scale in
+    tests via decode_step loops; the 32k dry-run cell measures the
+    dominant cost — the full forward.)"""
+    h, _ = backbone(cfg, params, batch, remat=False)
+    return _unembed(cfg, params, h)

@@ -1,0 +1,79 @@
+"""AdamW implemented from scratch (no optax dependency).
+
+Moment dtype follows the config's DTypePolicy so >=100B archs can keep
+moments in bf16 (with fp32 master update math) to fit HBM. ZeRO-1 sharding
+of the moments is applied by the launcher via output shardings — the
+optimizer itself is sharding-agnostic pure function.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Any, NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+
+@dataclass(frozen=True)
+class AdamWConfig:
+    lr: float = 3e-4
+    b1: float = 0.9
+    b2: float = 0.95
+    eps: float = 1e-8
+    weight_decay: float = 0.01
+    grad_clip: float = 1.0
+    moment_dtype: str = "float32"
+
+
+class OptState(NamedTuple):
+    step: jax.Array
+    m: Any
+    v: Any
+
+
+def init_opt(params, cfg: AdamWConfig) -> OptState:
+    dt = jnp.dtype(cfg.moment_dtype)
+    zeros = lambda p: jnp.zeros_like(p, dtype=dt)  # noqa: E731
+    return OptState(step=jnp.zeros((), jnp.int32),
+                    m=jax.tree.map(zeros, params),
+                    v=jax.tree.map(zeros, params))
+
+
+def global_norm(tree):
+    return jnp.sqrt(sum(jnp.sum(jnp.square(x.astype(jnp.float32)))
+                        for x in jax.tree.leaves(tree)))
+
+
+def apply_updates(params, grads, state: OptState, cfg: AdamWConfig):
+    """Returns (new_params, new_state, metrics)."""
+    step = state.step + 1
+    gnorm = global_norm(grads)
+    scale = jnp.minimum(1.0, cfg.grad_clip / (gnorm + 1e-9))
+
+    b1, b2 = cfg.b1, cfg.b2
+    bc1 = 1.0 - b1 ** step.astype(jnp.float32)
+    bc2 = 1.0 - b2 ** step.astype(jnp.float32)
+    mdt = jnp.dtype(cfg.moment_dtype)
+
+    def upd(p, g, m, v):
+        g32 = g.astype(jnp.float32) * scale
+        m32 = b1 * m.astype(jnp.float32) + (1 - b1) * g32
+        v32 = b2 * v.astype(jnp.float32) + (1 - b2) * jnp.square(g32)
+        mhat = m32 / bc1
+        vhat = v32 / bc2
+        step_dir = mhat / (jnp.sqrt(vhat) + cfg.eps)
+        if p.ndim >= 2:           # decoupled weight decay on matrices only
+            step_dir = step_dir + cfg.weight_decay * p.astype(jnp.float32)
+        new_p = p.astype(jnp.float32) - cfg.lr * step_dir
+        return new_p.astype(p.dtype), m32.astype(mdt), v32.astype(mdt)
+
+    flat_p, tdef = jax.tree.flatten(params)
+    flat_g = jax.tree.leaves(grads)
+    flat_m = jax.tree.leaves(state.m)
+    flat_v = jax.tree.leaves(state.v)
+    out = [upd(p, g, m, v) for p, g, m, v in
+           zip(flat_p, flat_g, flat_m, flat_v)]
+    new_p = jax.tree.unflatten(tdef, [o[0] for o in out])
+    new_m = jax.tree.unflatten(tdef, [o[1] for o in out])
+    new_v = jax.tree.unflatten(tdef, [o[2] for o in out])
+    return new_p, OptState(step, new_m, new_v), {"grad_norm": gnorm}

@@ -1,0 +1,38 @@
+"""train_step / loss: the function lowered by the dry-run and the trainer."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models.transformer import train_logits
+from repro.train.optim import AdamWConfig, OptState, apply_updates
+from repro.train.xent import softmax_xent
+
+AUX_WEIGHT = 0.01
+MTP_WEIGHT = 0.3
+
+
+def loss_fn(cfg: ModelConfig, params, batch, remat=True):
+    logits, extras = train_logits(cfg, params, batch, remat=remat)
+    loss, _ = softmax_xent(logits, batch["labels"],
+                           batch.get("loss_mask"))
+    total = loss + AUX_WEIGHT * extras.get("aux_loss", 0.0)
+    if "mtp_logits" in extras:
+        # MTP predicts token t+2: shift labels by one more position
+        mtp_labels = jnp.roll(batch["labels"], -1, axis=1)
+        mtp_loss, _ = softmax_xent(extras["mtp_logits"], mtp_labels)
+        total = total + MTP_WEIGHT * mtp_loss
+    return total, {"xent": loss, "aux": extras.get("aux_loss", 0.0)}
+
+
+def make_train_step(cfg: ModelConfig, opt_cfg: AdamWConfig, remat=True):
+    def train_step(params, opt_state: OptState, batch):
+        (loss, metrics), grads = jax.value_and_grad(
+            lambda p: loss_fn(cfg, p, batch, remat), has_aux=True)(params)
+        params, opt_state, opt_metrics = apply_updates(
+            params, grads, opt_state, opt_cfg)
+        metrics = dict(metrics, loss=loss, **opt_metrics)
+        return params, opt_state, metrics
+
+    return train_step

@@ -1,0 +1,27 @@
+"""Cross-entropy over (possibly vocab-sharded) logits.
+
+Reductions over the vocab dim are plain jnp ops; under pjit with logits
+sharded ('vocab' -> 'model') GSPMD lowers the max/logsumexp to all-reduces
+over the model axis, so no full-vocab gather is ever materialized.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def softmax_xent(logits, labels, mask=None):
+    """logits [B,S,V] (any float dtype), labels [B,S] int32.
+    Returns (mean loss fp32, per-token loss [B,S])."""
+    lg = logits.astype(jnp.float32)
+    m = jnp.max(lg, axis=-1, keepdims=True)
+    shifted = lg - jax.lax.stop_gradient(m)
+    lse = jnp.log(jnp.sum(jnp.exp(shifted), axis=-1)) + m[..., 0]
+    label_logit = jnp.take_along_axis(lg, labels[..., None],
+                                      axis=-1)[..., 0]
+    per_tok = lse - label_logit
+    if mask is None:
+        mask = jnp.ones_like(per_tok)
+    mask = mask.astype(jnp.float32)
+    loss = jnp.sum(per_tok * mask) / jnp.maximum(jnp.sum(mask), 1.0)
+    return loss, per_tok

@@ -1,0 +1,250 @@
+"""Paper-core behaviour: PPR-INI, subgraph building, decoupled==coupled,
+ACK mode equivalence, scheduler overlap, DSE."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core.ack import choose_mode
+from repro.core.coupled import (coupled_reference_embedding, lhop_nodes,
+                                receptive_field_size)
+from repro.core.dse import TPUSpec, explore
+from repro.core.engine import DecoupledEngine
+from repro.core.ini import (ini_batch, ppr_local_push, ppr_power_iteration,
+                            select_important)
+from repro.core.scheduler import PipelineScheduler
+from repro.core.subgraph import (batch_from_node_lists, build_batch,
+                                 default_edge_pad)
+from repro.gnn.model import (GNNConfig, gnn_forward, init_gnn,
+                             paper_model_grid)
+from repro.graphs.csr import from_edge_list
+from repro.graphs.synthetic import get_graph
+
+
+@pytest.fixture(scope="module")
+def graph():
+    return get_graph("flickr", scale=0.02, seed=1)   # ~1.8k vertices
+
+
+def small_graph(n, seed, extra_edges=2):
+    rng = np.random.default_rng(seed)
+    # random connected-ish graph
+    src = np.arange(1, n)
+    dst = rng.integers(0, np.maximum(src, 1))
+    e_src = rng.integers(0, n, size=n * extra_edges)
+    e_dst = rng.integers(0, n, size=n * extra_edges)
+    feats = rng.standard_normal((n, 8)).astype(np.float32)
+    return from_edge_list(np.concatenate([src, e_src]),
+                          np.concatenate([dst, e_dst]), n, feats)
+
+
+class TestPPR:
+    @settings(max_examples=10, deadline=None)
+    @given(st.integers(0, 10_000))
+    def test_local_push_matches_power_iteration(self, seed):
+        g = small_graph(60, seed)
+        t = int(np.random.default_rng(seed).integers(0, 60))
+        verts, scores = ppr_local_push(g, t, eps=1e-7)
+        pi = ppr_power_iteration(g, t)
+        dense = np.zeros(g.num_vertices)
+        dense[verts] = scores
+        # approximate PPR within eps * deg per vertex (ACL guarantee)
+        err = np.abs(dense - pi).max()
+        assert err < 1e-4, err
+
+    def test_push_mass_conservation(self, graph):
+        verts, scores = ppr_local_push(graph, 3, eps=1e-5)
+        total = scores.sum()
+        assert 0.5 < total <= 1.0 + 1e-6   # p mass <= 1, most recovered
+
+    def test_select_important_target_first(self, graph):
+        nodes = select_important(graph, 17, 64)
+        assert nodes[0] == 17
+        assert len(nodes) <= 64
+        assert len(np.unique(nodes)) == len(nodes)
+
+    def test_ini_batch_threads_match_serial(self, graph):
+        targets = [1, 5, 9, 13]
+        a = ini_batch(graph, targets, 32, num_threads=1)
+        b = ini_batch(graph, targets, 32, num_threads=4)
+        for x, y in zip(a, b):
+            np.testing.assert_array_equal(x, y)
+
+
+class TestSubgraph:
+    def test_padding_and_norms(self, graph):
+        sb = build_batch(graph, [3, 7], 64, num_threads=1)
+        assert sb.feats.shape == (2, 64, graph.feature_dim)
+        assert sb.adj.shape == (2, 64, 64)
+        # masked rows are all-zero
+        for c in range(2):
+            k = int(sb.n_vertices[c])
+            assert sb.mask[c, :k].all() and not sb.mask[c, k:].any()
+            assert (sb.adj[c, k:, :] == 0).all()
+            assert (sb.feats[c, k:, :] == 0).all()
+            # adj_mean rows are row-stochastic where a row has neighbors
+            rs = sb.adj_mean[c].sum(1)
+            nz = rs > 0
+            np.testing.assert_allclose(rs[nz], 1.0, rtol=1e-5)
+
+    def test_pad_invariance(self, graph):
+        """Embedding must not depend on the pad width."""
+        nodes = select_important(graph, 3, 32)
+        cfg64 = GNNConfig(kind="gcn", n_layers=2, receptive_field=64,
+                          f_in=graph.feature_dim, readout="max")
+        cfg128 = GNNConfig(kind="gcn", n_layers=2, receptive_field=128,
+                           f_in=graph.feature_dim, readout="max")
+        params = init_gnn(cfg64, jax.random.PRNGKey(0))
+        e = default_edge_pad(graph, 128)
+        for cfg, npad in ((cfg64, 64), (cfg128, 128)):
+            sb = batch_from_node_lists(graph, [3], [nodes], npad, e)
+            b = dict(feats=sb.feats, adj=sb.adj, adj_mean=sb.adj_mean,
+                     mask=sb.mask)
+            emb, _ = gnn_forward(cfg, params, b)
+            if npad == 64:
+                ref = np.asarray(emb)
+            else:
+                np.testing.assert_allclose(np.asarray(emb), ref,
+                                           rtol=1e-5, atol=1e-5)
+
+    def test_receptive_field_growth(self, graph):
+        """Coupled L-hop receptive field explodes; decoupled stays fixed."""
+        targets = list(range(8))
+        r1 = receptive_field_size(graph, targets, 1)
+        r2 = receptive_field_size(graph, targets, 2)
+        r3 = receptive_field_size(graph, targets, 3)
+        assert r1 < r2 < r3
+        assert r3 > 10 * r1
+
+
+class TestDecoupledVsCoupled:
+    """The paper's equivalence: over the FULL L-hop receptive field with
+    readout='target', decoupled inference == Algorithm-1 recursion."""
+
+    @pytest.mark.parametrize("kind", ["gcn", "sage"])
+    @pytest.mark.parametrize("L", [1, 2, 3])
+    def test_equivalence(self, kind, L):
+        g = small_graph(80, seed=L * 7 + (kind == "sage"))
+        tgt = 5
+        nodes = lhop_nodes(g, tgt, L)
+        npad = int(max(8, 1 << int(np.ceil(np.log2(len(nodes))))))
+        cfg = GNNConfig(kind=kind, n_layers=L, receptive_field=npad,
+                        f_in=g.feature_dim, f_hidden=16, readout="target")
+        params = init_gnn(cfg, jax.random.PRNGKey(L))
+        sb = batch_from_node_lists(g, [tgt], [nodes], npad,
+                                   max(1, npad * (npad - 1)))
+        assert sb.edges_dropped == 0
+        b = dict(feats=sb.feats, adj=sb.adj, adj_mean=sb.adj_mean,
+                 mask=sb.mask)
+        emb, _ = gnn_forward(cfg, params, b)
+        ref = coupled_reference_embedding(
+            g, tgt, L, jax.tree.map(np.asarray, params), kind)
+        np.testing.assert_allclose(np.asarray(emb)[0], ref,
+                                   rtol=2e-4, atol=2e-5)
+
+
+class TestAckModes:
+    @pytest.mark.parametrize("kind", ["gcn", "sage", "gin", "gat"])
+    def test_dense_equals_sg(self, kind, graph):
+        cfg = GNNConfig(kind=kind, n_layers=2, receptive_field=64,
+                        f_in=graph.feature_dim)
+        e = DecoupledEngine(graph, cfg, batch_size=4, impl="xla",
+                            mode="dense", e_pad=64 * 63)
+        r1 = e.infer(np.arange(4), overlap=False)
+        e2 = DecoupledEngine(graph, cfg, params=e.params, batch_size=4,
+                             impl="xla", mode="sg", e_pad=64 * 63)
+        r2 = e2.infer(np.arange(4), overlap=False)
+        scale = np.abs(r1.embeddings).max()
+        np.testing.assert_allclose(r1.embeddings / scale,
+                                   r2.embeddings / scale,
+                                   rtol=1e-4, atol=1e-5)
+
+    def test_mode_choice(self):
+        # dense subgraph -> dense mode; ultra-sparse -> sg
+        assert choose_mode(128, avg_edges=2000, f=256).mode == "dense"
+        assert choose_mode(256, avg_edges=20, f=256).mode == "sg"
+        assert choose_mode(64, avg_edges=999, f=256,
+                           force="sg").mode == "sg"
+
+
+class TestEngineAndScheduler:
+    def test_engine_end_to_end(self, graph):
+        cfg = GNNConfig(kind="sage", n_layers=3, receptive_field=64,
+                        f_in=graph.feature_dim)
+        eng = DecoupledEngine(graph, cfg, batch_size=8)
+        res = eng.infer(np.arange(20))     # non-multiple of batch
+        assert res.embeddings.shape == (20, cfg.f_hidden)
+        assert np.isfinite(res.embeddings).all()
+        assert res.stats.n_batches == 3
+        assert res.stats.t_initialization > 0
+
+    def test_scheduler_overlap_vs_serial(self):
+        import time
+
+        def host_fn(i):
+            time.sleep(0.01)
+            return i
+
+        def dev_fn(x):
+            time.sleep(0.01)
+            return jnp.asarray(x)
+
+        sched = PipelineScheduler(host_fn, dev_fn, depth=3)
+        _, st_overlap = sched.run(list(range(8)), overlap=True)
+        _, st_serial = sched.run(list(range(8)), overlap=False)
+        assert st_overlap.t_wall < st_serial.t_wall * 0.85
+        assert st_overlap.overlap_fraction > 0.3
+
+    def test_batch_results_identical_with_and_without_overlap(self, graph):
+        cfg = GNNConfig(kind="gcn", n_layers=2, receptive_field=32,
+                        f_in=graph.feature_dim)
+        eng = DecoupledEngine(graph, cfg, batch_size=4)
+        a = eng.infer(np.arange(8), overlap=True).embeddings
+        b = eng.infer(np.arange(8), overlap=False).embeddings
+        np.testing.assert_allclose(a, b, rtol=1e-6)
+
+
+class TestDSE:
+    def test_plan_properties(self):
+        models = list(paper_model_grid())
+        plan = explore(models)
+        assert plan.ops_ok
+        assert plan.block_f % 128 == 0
+        assert plan.block_f & (plan.block_f - 1) == 0   # power of two
+        assert plan.vmem_used <= TPUSpec().vmem_bytes
+        assert len(plan.per_model) == len({m.display for m in models})
+
+    def test_single_plan_covers_all_models(self):
+        """Paper's claim: ONE hardware point serves every model spec."""
+        small = explore([GNNConfig(kind="gcn", n_layers=3,
+                                   receptive_field=64, f_in=128)])
+        big = explore(list(paper_model_grid()))
+        # plan for the superset must still fit VMEM
+        assert big.vmem_used <= TPUSpec().vmem_bytes
+        assert big.block_f <= small.block_f * 4
+
+
+class TestFeatureDedup:
+    """Beyond-paper H6: cross-target feature dedup (EXPERIMENTS SPerf)."""
+
+    def test_packed_equals_dense(self, graph):
+        cfg = GNNConfig(kind="gcn", n_layers=2, receptive_field=64,
+                        f_in=graph.feature_dim)
+        e1 = DecoupledEngine(graph, cfg, batch_size=8)
+        e2 = DecoupledEngine(graph, cfg, params=e1.params, batch_size=8,
+                             dedup_features=True)
+        t = np.arange(16)
+        r1 = e1.infer(t, overlap=False)
+        r2 = e2.infer(t, overlap=False)
+        np.testing.assert_array_equal(r1.embeddings, r2.embeddings)
+        assert e2.last_dedup_ratio < 1.0   # hubs recur -> actual savings
+
+    def test_ratio_improves_with_batch(self, graph):
+        from repro.core.ini import ini_batch
+        from repro.core.subgraph import packed_features
+        nl8 = ini_batch(graph, list(range(8)), 64, num_threads=1)
+        nl64 = ini_batch(graph, list(range(64)), 64, num_threads=1)
+        _, _, r8 = packed_features(nl8, graph, 64)
+        _, _, r64 = packed_features(nl64, graph, 64)
+        assert r64 < r8    # more targets -> more hub reuse

@@ -1,0 +1,97 @@
+"""The roofline harness's HLO walker: trip-count multipliers, dot-FLOP
+parsing, collective accounting — validated against cost_analysis and
+analytic counts (the probe findings, frozen as regression tests)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.launch.hlo_analysis import (Computation, analyze, multipliers,
+                                       parse_module)
+
+
+def _scan_matmul(L, M, K, N):
+    def f(w, x):
+        def body(h, wl):
+            return jnp.dot(h, wl), None
+        h, _ = jax.lax.scan(body, x, w)
+        return h
+    return jax.jit(f).lower(
+        jax.ShapeDtypeStruct((L, K, N), jnp.float32),
+        jax.ShapeDtypeStruct((M, K), jnp.float32)).compile()
+
+
+class TestTripCountCorrection:
+    @pytest.mark.parametrize("L", [2, 5, 9])
+    def test_scan_flops_multiplied(self, L):
+        M = K = N = 32
+        compiled = _scan_matmul(L, M, K, N)
+        s = analyze(compiled.as_text())
+        analytic = 2.0 * L * M * K * N
+        # dot flops exact; allow small epsilon for stray tiny dots
+        assert abs(s.flops - analytic) / analytic < 0.01, (s.flops,
+                                                           analytic)
+        assert L in s.trip_counts
+
+    def test_cost_analysis_undercounts_scans(self):
+        """The reason the walker exists: XLA counts the body once."""
+        L, M = 8, 32
+        compiled = _scan_matmul(L, M, M, M)
+        ca_flops = compiled.cost_analysis()["flops"]
+        analytic = 2.0 * L * M ** 3
+        assert ca_flops < 0.3 * analytic            # ~1/L of the truth
+        assert abs(analyze(compiled.as_text()).flops - analytic) \
+            / analytic < 0.01
+
+    def test_no_scan_matches_cost_analysis(self):
+        """At multiplier 1 the walker agrees with XLA's own count."""
+        compiled = jax.jit(lambda a, b: a @ b).lower(
+            jax.ShapeDtypeStruct((64, 128), jnp.float32),
+            jax.ShapeDtypeStruct((128, 32), jnp.float32)).compile()
+        s = analyze(compiled.as_text())
+        ca = compiled.cost_analysis()["flops"]
+        np.testing.assert_allclose(s.flops, ca, rtol=0.01)
+
+
+class TestParser:
+    SNIPPET = """\
+HloModule test
+
+%wide.body (p: (s32[], f32[8,8])) -> (s32[], f32[8,8]) {
+  %p = (s32[], f32[8,8]{1,0}) parameter(0)
+  %g = f32[8,8]{1,0} get-tuple-element(%p), index=1
+  %ar = f32[8,8]{1,0} all-reduce(%g), replica_groups=[2,4]<=[8], to_apply=%add
+  ROOT %t = (s32[], f32[8,8]{1,0}) tuple(%g, %ar)
+}
+
+%wide.cond (p: (s32[], f32[8,8])) -> pred[] {
+  %p = (s32[], f32[8,8]{1,0}) parameter(0)
+  ROOT %lt = pred[] compare(%p, %p), direction=LT
+}
+
+ENTRY %main (x: f32[8,8]) -> f32[8,8] {
+  %x = f32[8,8]{1,0} parameter(0)
+  %ag = f32[8,32]{1,0} all-gather(%x), replica_groups={{0,1,2,3},{4,5,6,7}}, dimensions={1}
+  %tup = (s32[], f32[8,8]{1,0}) tuple(%x, %x)
+  %w = (s32[], f32[8,8]{1,0}) while(%tup), condition=%wide.cond, body=%wide.body, backend_config={"known_trip_count":{"n":"7"}}
+  ROOT %r = f32[8,8]{1,0} get-tuple-element(%w), index=1
+}
+"""
+
+    def test_canned_module(self):
+        s = analyze(self.SNIPPET, n_devices=8)
+        # all-gather once at entry: 8*32*4 bytes result
+        assert s.per_collective["all-gather"] == 8 * 32 * 4
+        # all-reduce inside a trip-7 while: 7 * 8*8*4
+        assert s.per_collective["all-reduce"] == 7 * 8 * 8 * 4
+        assert s.trip_counts == [7]
+        # ring factors: AG group of 4 -> 3/4; AR group of 4 -> 2 * 3/4
+        expect_link = (8 * 32 * 4) * 3 / 4 + 7 * (8 * 8 * 4) * 2 * 3 / 4
+        np.testing.assert_allclose(s.collective_link_bytes, expect_link)
+
+    def test_multiplier_propagation(self):
+        comps = parse_module(self.SNIPPET)
+        m = multipliers(comps)
+        assert m["main"] == 1.0
+        assert m["wide.body"] == 7.0
+        assert m["wide.cond"] == 8.0            # trips + 1 evaluations
