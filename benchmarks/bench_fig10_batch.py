@@ -18,10 +18,10 @@ def run(quick: bool = True):
     rng = np.random.default_rng(0)
     rows = []
     for bs in sizes:
-        eng = DecoupledEngine(g, cfg, batch_size=min(bs, 64))
-        targets = rng.integers(0, g.num_vertices, size=bs)
-        t = timeit(lambda: eng.infer(targets), warmup=1, iters=2)
-        res = eng.infer(targets)
+        with DecoupledEngine(g, cfg, batch_size=min(bs, 64)) as eng:
+            targets = rng.integers(0, g.num_vertices, size=bs)
+            t = timeit(lambda: eng.infer(targets), warmup=1, iters=2)
+            res = eng.infer(targets)
         rows.append({"batch": bs,
                      "latency_ms": round(t["min_s"] * 1e3, 2),
                      "ms_per_target": round(t["min_s"] * 1e3 / bs, 3),

@@ -7,7 +7,6 @@ the quantities the paper uses to justify decoupling (§2.2, §3.2).
 """
 from __future__ import annotations
 
-import numpy as np
 
 from benchmarks.common import QUICK_SCALE, print_table, save_result
 from repro.core.coupled import receptive_field_size

@@ -43,9 +43,9 @@ def run(quick: bool = True):
             for N in fields:
                 cfg = GNNConfig(kind=kind, n_layers=L, receptive_field=N,
                                 f_in=g.feature_dim)
-                eng = DecoupledEngine(g, cfg, batch_size=batch)
-                t = timeit(lambda: eng.infer(targets), warmup=1,
-                           iters=2 if quick else 3)
+                with DecoupledEngine(g, cfg, batch_size=batch) as eng:
+                    t = timeit(lambda: eng.infer(targets), warmup=1,
+                               iters=2 if quick else 3)
                 rows.append({
                     "model": kind, "L": L, "N": N,
                     "latency_ms": round(t["min_s"] * 1e3, 2),

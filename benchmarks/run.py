@@ -15,7 +15,8 @@ import traceback
 
 from benchmarks import (bench_eq1_loadbalance, bench_fig3_breakdown,
                         bench_fig8_latency, bench_fig10_batch,
-                        bench_kernels, bench_table5_load, bench_table6_ini)
+                        bench_kernels, bench_serve_multimodel,
+                        bench_table5_load, bench_table6_ini)
 
 SUITES = {
     "fig8_latency": bench_fig8_latency.run,
@@ -25,6 +26,7 @@ SUITES = {
     "table6_ini": bench_table6_ini.run,
     "eq1_loadbalance": bench_eq1_loadbalance.run,
     "kernels": bench_kernels.run,
+    "serve_multimodel": bench_serve_multimodel.run_suite,
 }
 
 

@@ -3,8 +3,7 @@ os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
 import time
 
 import jax
-import jax.numpy as jnp
-from jax.sharding import NamedSharding, PartitionSpec as P
+from jax.sharding import PartitionSpec as P
 
 from repro.configs.registry import get_config
 from repro.configs.base import SHAPES

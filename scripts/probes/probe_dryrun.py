@@ -48,14 +48,17 @@ jf = jax.jit(h_fn, in_shardings=(NamedSharding(mesh, P("data", "model")),
                                  NamedSharding(mesh, P("model", None))))
 low = jf.lower(xs, ws)
 txt = low.compile().as_text()
+COLL_OPS = ("all-reduce", "all-gather", "reduce-scatter", "all-to-all",
+            "collective-permute")
 colls = [l.split("=")[1].split("(")[0].strip() for l in txt.splitlines()
-         if any(op in l for op in ("all-reduce", "all-gather", "reduce-scatter", "all-to-all", "collective-permute")) and "=" in l]
+         if any(op in l for op in COLL_OPS) and "=" in l]
 print("collectives:", colls[:10])
 # check while-body collectives visibility
 def f2(w, x):
     def body(h, wl):
         h = h @ wl
-        return jax.lax.with_sharding_constraint(h, NamedSharding(mesh, P("data", None))), None
+        return jax.lax.with_sharding_constraint(
+            h, NamedSharding(mesh, P("data", None))), None
     h, _ = jax.lax.scan(body, x, w)
     return h
 jf2 = jax.jit(f2, in_shardings=(NamedSharding(mesh, P(None, None, "model")),

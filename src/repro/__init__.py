@@ -1,0 +1,4 @@
+"""Reproduction of 'Low-latency Mini-batch GNN Inference on CPU-FPGA
+Heterogeneous Platform' grown into a JAX serving system."""
+
+__version__ = "0.1.0"

@@ -9,7 +9,7 @@ from __future__ import annotations
 
 import dataclasses
 from dataclasses import dataclass, field
-from typing import Optional, Tuple
+from typing import Optional
 
 
 @dataclass(frozen=True)
@@ -136,7 +136,8 @@ class ModelConfig:
                              else self.hybrid_attn_period)
         kw["d_model"] = 64
         kw["n_heads"] = 4
-        kw["n_kv_heads"] = max(1, min(self.n_kv_heads, 2)) if self.n_kv_heads < self.n_heads else 4
+        kw["n_kv_heads"] = max(1, min(self.n_kv_heads, 2)) \
+            if self.n_kv_heads < self.n_heads else 4
         kw["d_ff"] = 128
         kw["vocab_size"] = 256
         kw["head_dim"] = 16

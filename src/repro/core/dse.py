@@ -61,6 +61,47 @@ class DSEPlan:
     per_model: Dict[str, dict] = field(default_factory=dict)
 
 
+class PlanViolation(ValueError):
+    """A model does not fit under the shared DSEPlan."""
+
+
+def plan_covers(plan: DSEPlan, cfg: GNNConfig,
+                spec: TPUSpec = TPUSpec()) -> List[str]:
+    """Why ``cfg`` does NOT run under ``plan`` (empty list = covered).
+
+    This is the serving-time admission check: a multi-model deployment
+    keeps ONE plan (paper: one bitstream) and every registered model must
+    (a) use only ops the plan's ALU set supports and (b) fit the plan's
+    buffered VMEM working set at its own receptive field / feature dims.
+    """
+    reasons: List[str] = []
+    ops = KIND_OPS.get(cfg.kind)
+    if ops is None:
+        reasons.append(f"unknown model kind {cfg.kind!r}")
+    elif not ops <= TPU_OPS:
+        reasons.append(f"ops {sorted(ops - TPU_OPS)} unsupported")
+    f = max(cfg.f_in, cfg.f_hidden)
+    f_pad = f + (-f) % MXU_LANE
+    vm = _vmem_layer(cfg.receptive_field, f_pad, plan.block_f,
+                     plan.buffer_depth)
+    if vm > spec.vmem_bytes:
+        reasons.append(
+            f"VMEM working set {vm} > budget {spec.vmem_bytes} "
+            f"(N={cfg.receptive_field}, f_pad={f_pad}, BF={plan.block_f})")
+    return reasons
+
+
+def validate_models(plan: DSEPlan, models: Sequence[GNNConfig],
+                    spec: TPUSpec = TPUSpec()) -> None:
+    """Raise PlanViolation unless every model runs under the one plan."""
+    if not plan.ops_ok:
+        raise PlanViolation("plan was built over an unsupported op set")
+    bad = {m.display: plan_covers(plan, m, spec) for m in models}
+    bad = {k: v for k, v in bad.items() if v}
+    if bad:
+        raise PlanViolation(f"models outside the shared plan: {bad}")
+
+
 def _vmem_layer(n: int, f_in: int, bf: int, depth: int = 2) -> int:
     """Working set of one fused-kernel grid step (fp32 bytes), times the
     pipeline buffering depth for the streamed operands."""

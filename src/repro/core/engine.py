@@ -8,21 +8,25 @@ the decoupling dividend: ONE compiled program serves every batch — the
 paper's "single accelerator, no reconfiguration" property.
 
 ``DecoupledEngine.infer`` overlaps host preparation of batch i+1 with
-device execution of batch i via core.scheduler (paper Fig. 7).
+device execution of batch i via core.scheduler (paper Fig. 7). The engine
+owns ONE persistent ``PipelineScheduler`` for its whole lifetime — batch
+and streaming calls share its host pool, dispatcher, and cumulative stats,
+so serving never pays per-call pipeline construction.
 """
 from __future__ import annotations
 
 import functools
 from dataclasses import dataclass
-from typing import Dict, List, Optional
+from typing import Dict, Optional
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
 from repro.core.ack import AckDecision, choose_mode
-from repro.core.scheduler import PipelineScheduler, SchedulerStats
-from repro.core.subgraph import SubgraphBatch, build_batch, default_edge_pad
+from repro.core.scheduler import (PipelineScheduler, SchedulerStats,
+                                  StreamTicket)
+from repro.core.subgraph import SubgraphBatch, default_edge_pad
 from repro.gnn.layers import readout
 from repro.gnn.model import GNNConfig, gnn_forward, init_gnn
 from repro.graphs.csr import CSRGraph
@@ -111,6 +115,10 @@ class DecoupledEngine:
                     l0[k] = jnp.pad(l0[k], ((0, pad), (0, 0)))
             self.params = dict(params, layer0=l0)
         self._infer = jax.jit(functools.partial(self._forward))
+        # one pipeline per deployment (paper: one accelerator config, no
+        # per-batch reconfiguration); lazily started on first use
+        self.scheduler = PipelineScheduler(self.prepare, self.run_device,
+                                           depth=3)
 
     # -- device program ----------------------------------------------------
     def _forward(self, params, batch: Dict[str, jax.Array]):
@@ -188,18 +196,41 @@ class DecoupledEngine:
         return self._infer(self.params, device_batch)
 
     # -- end-to-end ----------------------------------------------------------
+    def pad_targets(self, targets: np.ndarray) -> np.ndarray:
+        """Pad a tail chunk to the engine's fixed batch size C by repeating
+        the last target (fixed shapes keep the one compiled program)."""
+        C = self.batch_size
+        targets = np.asarray(targets)
+        if len(targets) == C:
+            return targets
+        if len(targets) > C or len(targets) == 0:
+            raise ValueError(f"chunk size {len(targets)} vs C={C}")
+        return np.concatenate(
+            [targets, np.repeat(targets[-1:], C - len(targets))])
+
+    def submit_chunk(self, targets, on_done=None) -> StreamTicket:
+        """Streaming entry: enqueue ONE micro-batch (≤ C targets, tail is
+        padded) on the persistent pipeline; returns a StreamTicket whose
+        result is the [C, f] embedding block."""
+        return self.scheduler.submit(self.pad_targets(np.asarray(targets)),
+                                     on_done=on_done)
+
     def infer(self, targets, overlap: bool = True) -> InferenceResult:
         """Mini-batch inference for arbitrary #targets (chunks of C)."""
         targets = np.asarray(targets)
         C = self.batch_size
-        chunks = [targets[i:i + C] for i in range(0, len(targets), C)]
-        if len(chunks) and len(chunks[-1]) < C:     # pad last chunk
-            last = chunks[-1]
-            chunks[-1] = np.concatenate(
-                [last, np.repeat(last[-1:], C - len(last))])
-        sched = PipelineScheduler(self.prepare, self.run_device,
-                                  depth=3 if overlap else 1)
-        outs, stats = sched.run(chunks, overlap=overlap)
+        chunks = [self.pad_targets(targets[i:i + C])
+                  for i in range(0, len(targets), C)]
+        outs, stats = self.scheduler.run(chunks, overlap=overlap)
         emb = np.concatenate([np.asarray(o) for o in outs], axis=0)
         return InferenceResult(embeddings=emb[:len(targets)], stats=stats,
                                decision=self.decision)
+
+    def close(self):
+        self.scheduler.close()
+
+    def __enter__(self) -> "DecoupledEngine":
+        return self
+
+    def __exit__(self, *exc):
+        self.close()

@@ -7,16 +7,26 @@ buffer), (b) is ``jax.device_put`` async H2D, and (c) is the jitted engine
 program — JAX's async dispatch naturally pipelines (b)/(c) while the pool
 pipelines (a).
 
+``PipelineScheduler`` is a *persistent streaming* pipeline: construct it
+once per deployment, then ``submit()`` micro-batches as they arrive (a
+long-lived server) or ``run()`` a list of them (offline inference). Both
+entry points share the same host pool, dispatcher thread, and cumulative
+``SchedulerStats`` — nothing is rebuilt per call, which is the paper's
+"single accelerator configuration, no reconfiguration between batches"
+property at the software layer.
+
 ``SchedulerStats`` reports the paper's §5.4 quantities: t_initialization
 (first-batch host latency, the un-hideable prologue), per-stage sums, and
 the achieved overlap fraction.
 """
 from __future__ import annotations
 
+import queue
+import threading
 import time
 from concurrent.futures import ThreadPoolExecutor
 from dataclasses import dataclass, field
-from typing import Callable, List, Sequence
+from typing import Any, Callable, List, Optional, Sequence
 
 import jax
 
@@ -48,60 +58,266 @@ class SchedulerStats:
                 "overlap": round(self.overlap_fraction, 3),
                 "batches": self.n_batches}
 
+    def record(self, t_host: float, t_device: float):
+        if not self.host_times:
+            self.t_initialization = t_host
+        self.host_times.append(t_host)
+        self.device_times.append(t_device)
+        self.t_host_total += t_host
+        self.t_device_total += t_device
+        self.n_batches += 1
+
+
+class StreamTicket:
+    """Handle for one in-flight micro-batch: resolves to the device output.
+
+    ``t_host``/``t_device`` carry the per-stage timings once done;
+    ``on_done(ticket)`` (if given) fires on the dispatcher thread — keep it
+    light (recording latencies, handing results to waiters).
+    """
+
+    __slots__ = ("item", "seq", "on_done", "t_submit", "t_host", "t_device",
+                 "output", "error", "_event", "_host_future")
+
+    def __init__(self, item: Any, seq: int,
+                 on_done: Optional[Callable] = None):
+        self.item = item
+        self.seq = seq
+        self.on_done = on_done
+        self.t_submit = time.perf_counter()
+        self.t_host = 0.0
+        self.t_device = 0.0
+        self.output: Any = None
+        self.error: Optional[BaseException] = None
+        self._event = threading.Event()
+        self._host_future = None
+
+    def done(self) -> bool:
+        return self._event.is_set()
+
+    def result(self, timeout: Optional[float] = None):
+        if not self._event.wait(timeout):
+            raise TimeoutError(f"batch {self.seq} not done in {timeout}s")
+        if self.error is not None:
+            raise self.error
+        return self.output
+
+
+_SHUTDOWN = object()
+
 
 class PipelineScheduler:
-    """Double/triple-buffered host->device pipeline.
+    """Persistent double/triple-buffered host->device streaming pipeline.
 
     host_fn(item)   -> host batch (numpy dict), CPU-bound
     device_fn(batch)-> device array(s); device work is async-dispatched
     depth           -> how many batches the host runs ahead (2 = double
                       buffering, 3 = the paper's triple buffering)
+    max_inflight    -> bound on submitted-but-incomplete batches;
+                      ``submit()`` blocks past it (backpressure), default
+                      2 * depth.
+
+    Lifecycle: lazily started on first submit/run; ``close()`` drains and
+    tears down threads. ``self.stats`` accumulates over the scheduler's
+    whole lifetime; ``run()`` additionally returns call-local stats.
     """
 
     def __init__(self, host_fn: Callable, device_fn: Callable,
-                 depth: int = 3):
+                 depth: int = 3, max_inflight: Optional[int] = None):
         self.host_fn, self.device_fn = host_fn, device_fn
         self.depth = max(1, depth)
+        self.max_inflight = max_inflight or 2 * self.depth
+        self.stats = SchedulerStats()
+        self._lock = threading.Lock()
+        self._idle = threading.Condition(self._lock)
+        self._order_q: "queue.Queue" = queue.Queue()
+        self._slots = threading.BoundedSemaphore(self.max_inflight)
+        self._inflight = 0
+        self._active_since: Optional[float] = None
+        self._seq = 0
+        self._pool: Optional[ThreadPoolExecutor] = None
+        self._dispatcher: Optional[threading.Thread] = None
+        self._closed = False
 
+    # -- lifecycle -----------------------------------------------------------
+    @property
+    def started(self) -> bool:
+        return self._dispatcher is not None
+
+    def start(self) -> "PipelineScheduler":
+        with self._lock:
+            if self._closed:
+                raise RuntimeError("scheduler is closed")
+            if self._dispatcher is not None:
+                return self
+            self._pool = ThreadPoolExecutor(
+                max_workers=self.depth, thread_name_prefix="sched-host")
+            self._dispatcher = threading.Thread(
+                target=self._dispatch_loop, name="sched-dispatch",
+                daemon=True)
+            self._dispatcher.start()
+        return self
+
+    def close(self):
+        if self._dispatcher is None or self._closed:
+            self._closed = True
+            return
+        self.flush()
+        self._closed = True
+        self._order_q.put(_SHUTDOWN)
+        self._dispatcher.join(timeout=10)
+        self._pool.shutdown(wait=True)
+        # a submit() that raced past the closed-check may have enqueued
+        # after _SHUTDOWN; fail its ticket rather than hang its waiter
+        while True:
+            try:
+                t = self._order_q.get_nowait()
+            except queue.Empty:
+                break
+            if t is not _SHUTDOWN:
+                t.error = RuntimeError("scheduler closed before dispatch")
+                self._complete(t)
+
+    # -- streaming interface -------------------------------------------------
+    def submit(self, item, on_done: Optional[Callable] = None
+               ) -> StreamTicket:
+        """Enqueue one micro-batch; blocks when max_inflight is reached."""
+        self.start()
+        self._slots.acquire()
+        if self._closed:             # close() ran while we were blocked
+            self._slots.release()
+            raise RuntimeError("scheduler is closed")
+        with self._lock:
+            t = StreamTicket(item, self._seq, on_done)
+            self._seq += 1
+            if self._inflight == 0:
+                self._active_since = time.perf_counter()
+            self._inflight += 1
+        try:
+            t._host_future = self._pool.submit(self._timed_host, item)
+            self._order_q.put(t)
+        except RuntimeError as e:    # pool shut down by a racing close()
+            with self._idle:
+                self._inflight -= 1
+                if self._inflight == 0:
+                    self._active_since = None
+                self._idle.notify_all()
+            self._slots.release()
+            raise RuntimeError("scheduler is closed") from e
+        return t
+
+    def flush(self, timeout: Optional[float] = None):
+        """Block until every submitted batch has completed."""
+        with self._idle:
+            if not self._idle.wait_for(lambda: self._inflight == 0,
+                                       timeout=timeout):
+                raise TimeoutError("scheduler flush timed out")
+
+    def _timed_host(self, item):
+        t = time.perf_counter()
+        hb = self.host_fn(item)
+        return hb, time.perf_counter() - t
+
+    def _complete(self, ticket: StreamTicket):
+        with self._lock:             # same lock as run()'s serial recorder
+            self.stats.record(ticket.t_host, ticket.t_device)
+        ticket._event.set()          # resolve BEFORE on_done: callbacks may
+        if ticket.on_done is not None:           # call ticket.result()
+            try:
+                ticket.on_done(ticket)
+            except Exception:        # callback errors must not kill pipeline
+                pass
+        # in-flight accounting last, so flush() implies callbacks finished
+        with self._idle:
+            self._inflight -= 1
+            if self._inflight == 0 and self._active_since is not None:
+                self.stats.t_wall += time.perf_counter() - self._active_since
+                self._active_since = None
+            self._idle.notify_all()
+        self._slots.release()
+
+    def _dispatch_loop(self):
+        pending: Optional[StreamTicket] = None
+        while True:
+            try:
+                # only poll while a batch is pending drain; otherwise block
+                # (an idle pipeline must not busy-wake — engines keep their
+                # scheduler for life and many may be idle at once)
+                if pending is None:
+                    t = self._order_q.get()
+                else:
+                    t = self._order_q.get(timeout=0.05)
+            except queue.Empty:
+                self._drain(pending)
+                pending = None
+                continue
+            if t is _SHUTDOWN:
+                if pending is not None:
+                    self._drain(pending)
+                break
+            td0 = time.perf_counter()
+            try:
+                hb, t.t_host = t._host_future.result()
+                td0 = time.perf_counter()
+                t.output = self.device_fn(hb)      # async dispatch
+            except BaseException as e:             # noqa: BLE001
+                t.error = e
+            if pending is not None:                # drain batch i-1 while
+                self._drain(pending)               # batch i computes
+                pending = None
+            t.t_device = time.perf_counter() - td0
+            if t.error is not None:
+                self._complete(t)
+            elif self._order_q.empty():
+                # nothing behind us: finish now for lowest tail latency
+                self._drain(t, extra_device_time=True)
+            else:
+                pending = t
+
+    def _drain(self, ticket: StreamTicket, extra_device_time: bool = False):
+        t0 = time.perf_counter()
+        try:
+            jax.block_until_ready(ticket.output)
+        except BaseException as e:                 # noqa: BLE001
+            ticket.error = e
+        if extra_device_time:
+            ticket.t_device += time.perf_counter() - t0
+        self._complete(ticket)
+
+    # -- batch interface (offline inference) ---------------------------------
     def run(self, items: Sequence, overlap: bool = True):
-        stats = SchedulerStats(n_batches=len(items))
-        outs = []
+        """Run a list of micro-batches; returns (outputs, call stats).
+
+        overlap=False executes fully serially on the caller thread (the
+        paper's no-pipelining baseline); both paths accumulate into the
+        cumulative ``self.stats``.
+        """
+        call = SchedulerStats(n_batches=len(items))
         t0 = time.perf_counter()
         if not overlap or self.depth == 1:
+            outs = []
             for it in items:
                 th = time.perf_counter()
                 hb = self.host_fn(it)
                 th = time.perf_counter() - th
-                stats.host_times.append(th)
                 td = time.perf_counter()
                 out = self.device_fn(hb)
                 jax.block_until_ready(out)
-                stats.device_times.append(time.perf_counter() - td)
+                td = time.perf_counter() - td
+                call.host_times.append(th)
+                call.device_times.append(td)
+                with self._lock:
+                    self.stats.record(th, td)
+                    self.stats.t_wall += th + td
                 outs.append(out)
         else:
-            def timed_host(it):
-                t = time.perf_counter()
-                hb = self.host_fn(it)
-                return hb, time.perf_counter() - t
-
-            with ThreadPoolExecutor(max_workers=self.depth) as pool:
-                futs = [pool.submit(timed_host, it) for it in items]
-                pending = None
-                for i, fut in enumerate(futs):
-                    hb, th = fut.result()
-                    stats.host_times.append(th)
-                    td = time.perf_counter()
-                    out = self.device_fn(hb)     # async dispatch
-                    if pending is not None:      # drain previous batch
-                        jax.block_until_ready(pending)
-                    stats.device_times.append(time.perf_counter() - td)
-                    outs.append(out)
-                    pending = out
-                if pending is not None:
-                    jax.block_until_ready(pending)
-        stats.t_wall = time.perf_counter() - t0
-        stats.t_host_total = sum(stats.host_times)
-        stats.t_device_total = sum(stats.device_times)
-        stats.t_initialization = stats.host_times[0] if stats.host_times \
+            tickets = [self.submit(it) for it in items]
+            outs = [t.result() for t in tickets]
+            call.host_times = [t.t_host for t in tickets]
+            call.device_times = [t.t_device for t in tickets]
+        call.t_wall = time.perf_counter() - t0
+        call.t_host_total = sum(call.host_times)
+        call.t_device_total = sum(call.device_times)
+        call.t_initialization = call.host_times[0] if call.host_times \
             else 0.0
-        return outs, stats
+        return outs, call

@@ -10,8 +10,7 @@ saturation across <= 2^23 replicas.
 """
 from __future__ import annotations
 
-import functools
-from typing import Any, Tuple
+from typing import Tuple
 
 import jax
 import jax.numpy as jnp

@@ -9,8 +9,7 @@ weights (bounded HLO at L=16). The first layer maps f_in -> f_hidden.
 """
 from __future__ import annotations
 
-from dataclasses import dataclass, field
-from typing import Optional
+from dataclasses import dataclass
 
 import jax
 import jax.numpy as jnp

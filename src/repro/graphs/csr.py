@@ -6,7 +6,7 @@ construction. Features live alongside as a dense [V, f] float32 matrix.
 """
 from __future__ import annotations
 
-from dataclasses import dataclass, field
+from dataclasses import dataclass
 from typing import Optional
 
 import numpy as np

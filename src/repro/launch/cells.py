@@ -7,7 +7,6 @@ importable without touching the XLA device-count env var.
 """
 from __future__ import annotations
 
-import functools
 from typing import Any, Dict, Tuple
 
 import jax

@@ -25,7 +25,6 @@ Conventions:
 """
 from __future__ import annotations
 
-import json
 import re
 from collections import defaultdict
 from dataclasses import dataclass, field

@@ -5,8 +5,6 @@ Decode path consumes a KV cache [B, S_max, Kh, Dh] and a scalar position.
 """
 from __future__ import annotations
 
-from typing import Optional
-
 import jax
 import jax.numpy as jnp
 

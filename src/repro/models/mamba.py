@@ -9,8 +9,6 @@ sequence length" property that qualifies SSM archs for the long_500k cell.
 """
 from __future__ import annotations
 
-from typing import Tuple
-
 import jax
 import jax.numpy as jnp
 

@@ -1,0 +1,2 @@
+# GNN serving: multi-model streaming runtime over DecoupledEngines.
+from repro.serve.gnn_server import GNNServer, Request, ServerStats

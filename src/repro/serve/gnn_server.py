@@ -1,10 +1,19 @@
-"""Batched mini-batch GNN inference serving (the paper's deployment shape).
+"""Multi-model streaming GNN serving (the paper's deployment shape).
 
-Requests (target vertex ids) arrive on a queue; the server forms
-fixed-size micro-batches (padding the tail with repeats), runs them through
-a DecoupledEngine with the pipelined scheduler, and records per-request
-latency. This is the "latency per batch" measurement loop of paper §3.1 /
-§5.3 as an actual server.
+The paper's headline system property (§4.5, pushed further by GraphAGILE):
+ONE accelerator configuration from design space exploration serves a SET of
+GNN models — GCN, GraphSAGE, GAT — with the task scheduler hiding host work
+under device compute. ``GNNServer`` is that shape as a running server:
+
+* several ``DecoupledEngine``s register under one server, validated against
+  a shared ``DSEPlan`` from ``core.dse.explore`` (admission control — a
+  model outside the plan is rejected, the software "doesn't fit the
+  bitstream");
+* each model gets its own micro-batcher lane: requests route by model name,
+  batch up to C with a tail-latency deadline, and stream into the engine's
+  PERSISTENT ``PipelineScheduler`` (no per-batch pipeline construction);
+* per-model latency percentiles (p50/p90/p99) and the achieved host/device
+  overlap fraction are reported, per model and aggregate.
 """
 from __future__ import annotations
 
@@ -16,15 +25,20 @@ from typing import Dict, List, Optional
 
 import numpy as np
 
+from repro.core.dse import DSEPlan, TPUSpec, explore, validate_models
 from repro.core.engine import DecoupledEngine
+
+DEFAULT_MODEL = "default"
 
 
 @dataclass
 class Request:
     target: int
+    model: str = DEFAULT_MODEL
     t_enqueue: float = field(default_factory=time.perf_counter)
     t_done: float = 0.0
     embedding: Optional[np.ndarray] = None
+    error: Optional[BaseException] = None
 
     @property
     def latency(self) -> float:
@@ -49,14 +63,13 @@ class ServerStats:
                 "n": len(a)}
 
 
-class GNNServer:
-    """Micro-batching server over a DecoupledEngine.
+class _ModelLane:
+    """One registered model: request queue + micro-batcher thread that
+    streams padded batches into the engine's persistent scheduler."""
 
-    max_wait_s bounds tail latency: a partial batch is flushed (padded with
-    repeated targets) once the oldest queued request exceeds the wait.
-    """
-
-    def __init__(self, engine: DecoupledEngine, max_wait_s: float = 0.005):
+    def __init__(self, name: str, engine: DecoupledEngine,
+                 max_wait_s: float):
+        self.name = name
         self.engine = engine
         self.max_wait_s = max_wait_s
         self.q: "queue.Queue[Request]" = queue.Queue()
@@ -64,11 +77,7 @@ class GNNServer:
         self._stop = threading.Event()
         self._thread: Optional[threading.Thread] = None
 
-    def submit(self, target: int) -> Request:
-        r = Request(int(target))
-        self.q.put(r)
-        return r
-
+    # -- micro-batching ------------------------------------------------------
     def _collect_batch(self) -> List[Request]:
         c = self.engine.batch_size
         out: List[Request] = []
@@ -94,39 +103,180 @@ class GNNServer:
                 break
         return out
 
-    def _serve_loop(self):
+    def _batch_loop(self):
         while not self._stop.is_set():
             reqs = self._collect_batch()
             if not reqs:
                 continue
-            c = self.engine.batch_size
             targets = np.array([r.target for r in reqs])
-            if len(targets) < c:
-                targets = np.concatenate(
-                    [targets, np.repeat(targets[-1:], c - len(targets))])
             t0 = time.perf_counter()
-            res = self.engine.infer(targets, overlap=True)
-            t1 = time.perf_counter()
-            for i, r in enumerate(reqs):
-                r.embedding = res.embeddings[i]
-                r.t_done = t1
-                self.stats.latencies.append(r.latency)
+            # streams into the engine's ONE persistent pipeline; blocks
+            # only when the scheduler's in-flight bound applies backpressure
+            self.engine.submit_chunk(
+                targets,
+                on_done=lambda tk, rs=reqs, ts=t0: self._on_done(rs, ts, tk))
+
+    def _on_done(self, reqs: List[Request], t0: float, ticket):
+        t1 = time.perf_counter()
+        if ticket.error is not None:
+            # surface the cause on every request of the failed batch so
+            # drain() can raise immediately instead of timing out
+            for r in reqs:
+                r.error = ticket.error
             self.stats.batch_latencies.append(t1 - t0)
             self.stats.n_batches += 1
+            return
+        emb = np.asarray(ticket.output)
+        for i, r in enumerate(reqs):
+            r.embedding = emb[i]
+            r.t_done = t1
+            self.stats.latencies.append(r.latency)
+        self.stats.batch_latencies.append(t1 - t0)
+        self.stats.n_batches += 1
 
+    # -- lifecycle -----------------------------------------------------------
     def start(self):
-        self._thread = threading.Thread(target=self._serve_loop,
-                                        daemon=True)
-        self._thread.start()
+        if self._thread is None:
+            self._stop.clear()       # server may stop() then start() again
+            self._thread = threading.Thread(
+                target=self._batch_loop, name=f"lane-{self.name}",
+                daemon=True)
+            self._thread.start()
 
     def stop(self):
         self._stop.set()
         if self._thread:
             self._thread.join(timeout=5)
+            if self._thread.is_alive():
+                # a later start() would race a still-live consumer on the
+                # same queue — refuse instead of doubling up
+                raise RuntimeError(f"lane {self.name!r} did not stop")
+            self._thread = None
+        self.engine.scheduler.flush(timeout=60)
+
+    def report(self) -> dict:
+        r = dict(self.stats.percentiles())
+        sched = self.engine.scheduler.stats
+        r["overlap"] = round(sched.overlap_fraction, 3)
+        r["sched_batches"] = sched.n_batches
+        r["kind"] = self.engine.cfg.kind
+        return r
+
+
+class GNNServer:
+    """Multi-tenant micro-batching router over DecoupledEngines.
+
+    ``register(name, engine)`` admits a model under the server's shared
+    ``DSEPlan`` (recomputed over ALL registered configs unless a fixed plan
+    was passed — then admission is validate-only). ``submit`` routes a
+    request to its model's lane. max_wait_s bounds tail latency: a partial
+    batch is flushed (padded with repeats) once the oldest queued request
+    exceeds the wait.
+
+    Back-compat: ``GNNServer(engine)`` registers it as "default" and
+    ``submit(target)`` with one registered model needs no model name.
+    """
+
+    def __init__(self, engine: Optional[DecoupledEngine] = None,
+                 max_wait_s: float = 0.005, *,
+                 plan: Optional[DSEPlan] = None,
+                 spec: Optional[TPUSpec] = None):
+        self.max_wait_s = max_wait_s
+        self.spec = spec or TPUSpec()
+        self.plan = plan
+        self._plan_fixed = plan is not None
+        self._lanes: Dict[str, _ModelLane] = {}
+        self._started = False
+        if engine is not None:
+            self.register(DEFAULT_MODEL, engine)
+
+    # -- model registry ------------------------------------------------------
+    def register(self, name: str, engine: DecoupledEngine) -> "GNNServer":
+        if name in self._lanes:
+            raise ValueError(f"model {name!r} already registered")
+        cfgs = [ln.engine.cfg for ln in self._lanes.values()] + [engine.cfg]
+        if self._plan_fixed:
+            validate_models(self.plan, [engine.cfg], self.spec)
+        else:
+            # one shared plan covering every registered model (the paper's
+            # DSE over the model SET), then admission-check each
+            plan = explore(cfgs, self.spec)
+            validate_models(plan, cfgs, self.spec)
+            self.plan = plan
+        lane = _ModelLane(name, engine, self.max_wait_s)
+        self._lanes[name] = lane
+        if self._started:
+            lane.start()
+        return self
+
+    @property
+    def models(self) -> List[str]:
+        return list(self._lanes)
+
+    def engine_for(self, model: str) -> DecoupledEngine:
+        return self._lanes[model].engine
+
+    # -- request path --------------------------------------------------------
+    def submit(self, target: int, model: Optional[str] = None) -> Request:
+        if model is None:
+            if len(self._lanes) != 1:
+                raise ValueError(
+                    f"model name required, registered: {self.models}")
+            model = next(iter(self._lanes))
+        lane = self._lanes.get(model)
+        if lane is None:
+            raise KeyError(f"unknown model {model!r}; "
+                           f"registered: {self.models}")
+        r = Request(int(target), model=model)
+        lane.q.put(r)
+        return r
 
     def drain(self, requests: List[Request], timeout: float = 60.0):
         t0 = time.perf_counter()
         while any(r.t_done == 0.0 for r in requests):
+            failed = next((r for r in requests if r.error is not None),
+                          None)
+            if failed is not None:
+                raise RuntimeError(
+                    f"request for vertex {failed.target} via "
+                    f"{failed.model!r} failed") from failed.error
             if time.perf_counter() - t0 > timeout:
                 raise TimeoutError("serve drain timed out")
             time.sleep(0.002)
+
+    # -- lifecycle -----------------------------------------------------------
+    def start(self):
+        if not self._lanes:
+            raise RuntimeError("no models registered")
+        self._started = True
+        for lane in self._lanes.values():
+            lane.start()
+
+    def stop(self):
+        for lane in self._lanes.values():
+            lane.stop()
+        self._started = False
+
+    # -- reporting -----------------------------------------------------------
+    def model_stats(self, model: str) -> ServerStats:
+        return self._lanes[model].stats
+
+    @property
+    def stats(self) -> ServerStats:
+        """Aggregate over all models (back-compat single-model view)."""
+        agg = ServerStats()
+        for lane in self._lanes.values():
+            agg.latencies += lane.stats.latencies
+            agg.batch_latencies += lane.stats.batch_latencies
+            agg.n_batches += lane.stats.n_batches
+        return agg
+
+    def report(self) -> dict:
+        """Per-model p50/p90/p99 + overlap fraction under the shared plan."""
+        per_model = {n: ln.report() for n, ln in self._lanes.items()}
+        return {"models": per_model,
+                "plan": {"block_f": self.plan.block_f,
+                         "c_core": self.plan.c_core,
+                         "buffer_depth": self.plan.buffer_depth,
+                         "vmem_used": self.plan.vmem_used},
+                "aggregate": self.stats.percentiles()}

@@ -10,7 +10,6 @@ Production behaviours exercised even at CPU smoke scale:
 from __future__ import annotations
 
 import json
-import os
 import time
 from dataclasses import dataclass
 from typing import Callable, Optional

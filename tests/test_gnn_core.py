@@ -4,7 +4,6 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
 
 from repro.core.ack import choose_mode
 from repro.core.coupled import (coupled_reference_embedding, lhop_nodes,
@@ -40,11 +39,12 @@ def small_graph(n, seed, extra_edges=2):
 
 
 class TestPPR:
-    @settings(max_examples=10, deadline=None)
-    @given(st.integers(0, 10_000))
-    def test_local_push_matches_power_iteration(self, seed):
-        g = small_graph(60, seed)
-        t = int(np.random.default_rng(seed).integers(0, 60))
+    # the hypothesis-driven push-vs-power-iteration property test lives in
+    # test_gnn_properties.py (skips cleanly when hypothesis is absent);
+    # this seed pins one deterministic instance of it in tier-1
+    def test_local_push_matches_power_iteration_fixed_seed(self):
+        g = small_graph(60, seed=1234)
+        t = int(np.random.default_rng(1234).integers(0, 60))
         verts, scores = ppr_local_push(g, t, eps=1e-7)
         pi = ppr_power_iteration(g, t)
         dense = np.zeros(g.num_vertices)
@@ -191,8 +191,10 @@ class TestEngineAndScheduler:
             return jnp.asarray(x)
 
         sched = PipelineScheduler(host_fn, dev_fn, depth=3)
+        sched.run([0])   # warm one-time device dispatch init out of timing
         _, st_overlap = sched.run(list(range(8)), overlap=True)
         _, st_serial = sched.run(list(range(8)), overlap=False)
+        sched.close()
         assert st_overlap.t_wall < st_serial.t_wall * 0.85
         assert st_overlap.overlap_fraction > 0.3
 

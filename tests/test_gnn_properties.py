@@ -1,0 +1,49 @@
+"""Hypothesis property tests for the PPR host path.
+
+Kept separate from test_gnn_core so the tier-1 suite collects (and a fixed
+seed of the same property still runs there) when ``hypothesis`` is not
+installed — ``pip install -e .[test]`` pulls it in for CI.
+"""
+import numpy as np
+import pytest
+
+hypothesis = pytest.importorskip("hypothesis")
+from hypothesis import given, settings, strategies as st  # noqa: E402
+
+from repro.core.ini import ppr_local_push, ppr_power_iteration  # noqa: E402
+from repro.graphs.csr import from_edge_list  # noqa: E402
+
+
+def small_graph(n, seed, extra_edges=2):
+    rng = np.random.default_rng(seed)
+    # random connected-ish graph
+    src = np.arange(1, n)
+    dst = rng.integers(0, np.maximum(src, 1))
+    e_src = rng.integers(0, n, size=n * extra_edges)
+    e_dst = rng.integers(0, n, size=n * extra_edges)
+    feats = rng.standard_normal((n, 8)).astype(np.float32)
+    return from_edge_list(np.concatenate([src, e_src]),
+                          np.concatenate([dst, e_dst]), n, feats)
+
+
+class TestPPRProperties:
+    @settings(max_examples=10, deadline=None)
+    @given(st.integers(0, 10_000))
+    def test_local_push_matches_power_iteration(self, seed):
+        g = small_graph(60, seed)
+        t = int(np.random.default_rng(seed).integers(0, 60))
+        verts, scores = ppr_local_push(g, t, eps=1e-7)
+        pi = ppr_power_iteration(g, t)
+        dense = np.zeros(g.num_vertices)
+        dense[verts] = scores
+        # approximate PPR within eps * deg per vertex (ACL guarantee)
+        err = np.abs(dense - pi).max()
+        assert err < 1e-4, err
+
+    @settings(max_examples=10, deadline=None)
+    @given(st.integers(0, 10_000), st.floats(1e-6, 1e-4))
+    def test_push_mass_bounded(self, seed, eps):
+        g = small_graph(40, seed)
+        _, scores = ppr_local_push(g, seed % 40, eps=eps)
+        assert (scores >= 0).all()
+        assert scores.sum() <= 1.0 + 1e-6

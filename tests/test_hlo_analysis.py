@@ -6,7 +6,7 @@ import jax.numpy as jnp
 import numpy as np
 import pytest
 
-from repro.launch.hlo_analysis import (Computation, analyze, multipliers,
+from repro.launch.hlo_analysis import (analyze, multipliers,
                                        parse_module)
 
 
@@ -19,6 +19,13 @@ def _scan_matmul(L, M, K, N):
     return jax.jit(f).lower(
         jax.ShapeDtypeStruct((L, K, N), jnp.float32),
         jax.ShapeDtypeStruct((M, K), jnp.float32)).compile()
+
+
+def _cost(compiled) -> dict:
+    """Normalize Compiled.cost_analysis() across jax versions (older
+    releases return a one-per-device list of dicts)."""
+    ca = compiled.cost_analysis()
+    return ca[0] if isinstance(ca, (list, tuple)) else ca
 
 
 class TestTripCountCorrection:
@@ -37,7 +44,7 @@ class TestTripCountCorrection:
         """The reason the walker exists: XLA counts the body once."""
         L, M = 8, 32
         compiled = _scan_matmul(L, M, M, M)
-        ca_flops = compiled.cost_analysis()["flops"]
+        ca_flops = _cost(compiled)["flops"]
         analytic = 2.0 * L * M ** 3
         assert ca_flops < 0.3 * analytic            # ~1/L of the truth
         assert abs(analyze(compiled.as_text()).flops - analytic) \
@@ -49,7 +56,7 @@ class TestTripCountCorrection:
             jax.ShapeDtypeStruct((64, 128), jnp.float32),
             jax.ShapeDtypeStruct((128, 32), jnp.float32)).compile()
         s = analyze(compiled.as_text())
-        ca = compiled.cost_analysis()["flops"]
+        ca = _cost(compiled)["flops"]
         np.testing.assert_allclose(s.flops, ca, rtol=0.01)
 
 

@@ -11,7 +11,7 @@ import pytest
 from repro.ckpt import checkpoint as ckpt
 from repro.configs.registry import get_config
 from repro.data.pipeline import (PrefetchIterator, TokenPipelineConfig,
-                                 synthetic_batch, token_pipeline)
+                                 synthetic_batch)
 from repro.distributed.compression import (compress_with_feedback,
                                            compression_wire_bytes,
                                            dequantize, init_residual,
