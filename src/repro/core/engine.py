@@ -31,6 +31,9 @@ from repro.gnn.layers import readout
 from repro.gnn.model import GNNConfig, gnn_forward, init_gnn
 from repro.graphs.csr import CSRGraph
 from repro.kernels import ops
+from repro.store import NeighborhoodCache, StorePolicy, build_feature_source
+from repro.store.feature_store import pad_feature_dim
+from repro.store.nbr_cache import nbr_key
 
 
 def _pad128(f: int) -> int:
@@ -88,12 +91,23 @@ class DecoupledEngine:
     def __init__(self, graph: CSRGraph, cfg: GNNConfig, params=None, *,
                  batch_size: int = 64, mode: str = "auto",
                  impl: str = "xla", num_threads: int = 8, seed: int = 0,
-                 e_pad: Optional[int] = None, dedup_features: bool = False):
+                 e_pad: Optional[int] = None, dedup_features: bool = False,
+                 store: Optional[StorePolicy] = None):
         self.graph, self.cfg = graph, cfg
         self.batch_size = batch_size
         self.num_threads = num_threads
         self.impl = impl
-        self.dedup_features = dedup_features
+        if store is None:
+            # back-compat: dedup_features=True was the pre-store spelling
+            # of the packed shipping strategy
+            store = StorePolicy(features="packed") if dedup_features \
+                else StorePolicy()
+        elif dedup_features and store.features != "packed":
+            raise ValueError(
+                "dedup_features=True conflicts with store.features="
+                f"{store.features!r}; use StorePolicy(features='packed')")
+        self.store_policy = store
+        self.dedup_features = store.features == "packed"
         self.last_dedup_ratio = None
         n = cfg.receptive_field
         self.e_pad = e_pad or default_edge_pad(graph, n)
@@ -115,10 +129,28 @@ class DecoupledEngine:
                     l0[k] = jnp.pad(l0[k], ((0, pad), (0, 0)))
             self.params = dict(params, layer0=l0)
         self._infer = jax.jit(functools.partial(self._forward))
+        self._fsource = build_feature_source(graph, store, self.f_pad)
+        self.nbr_cache = self._build_nbr_cache(store)
         # one pipeline per deployment (paper: one accelerator config, no
         # per-batch reconfiguration); lazily started on first use
         self.scheduler = PipelineScheduler(self.prepare, self.run_device,
                                            depth=3)
+
+    def _build_nbr_cache(self, policy: StorePolicy
+                         ) -> Optional[NeighborhoodCache]:
+        if policy.nbr_cache == "none":
+            return None
+        pinned = None
+        if policy.nbr_cache == "pinned":
+            pinned = policy.pinned_targets
+            if pinned is None:
+                # default hot set: top-degree targets (hub-heavy traffic
+                # hits them most under Zipf skew)
+                k = min(self.graph.num_vertices,
+                        policy.pinned_count or
+                        max(1, policy.nbr_capacity // 4))
+                pinned = np.argpartition(self.graph.degrees, -k)[-k:]
+        return NeighborhoodCache(policy.nbr_capacity, pinned_targets=pinned)
 
     # -- device program ----------------------------------------------------
     def _forward(self, params, batch: Dict[str, jax.Array]):
@@ -138,32 +170,72 @@ class DecoupledEngine:
         return emb
 
     # -- host side ----------------------------------------------------------
-    def prepare(self, targets) -> Dict[str, np.ndarray]:
+    def _pad_feature_dim(self, feats):
+        """Engine-facing entry to the single padding implementation
+        (store.feature_store.pad_feature_dim) bound to this engine's
+        f_pad — prepare/device_batch/run_device all route through it."""
+        return pad_feature_dim(feats, self.f_pad)
+
+    def _node_lists(self, targets):
+        """PPR neighborhoods for a batch, via the neighborhood cache when
+        the policy has one. Returns (node_lists, hits, misses) counted
+        over the batch's UNIQUE targets — duplicates collapse into one
+        count, so tail padding (pad_targets repeats the last target)
+        cannot inflate the hit rate with synthetic traffic."""
         from repro.core.ini import ini_batch
-        from repro.core.subgraph import (batch_from_node_lists,
-                                         packed_features)
-        node_lists = ini_batch(self.graph, targets,
-                               self.cfg.receptive_field,
-                               self.cfg.ppr_alpha, self.cfg.ppr_eps,
-                               self.num_threads)
+        cfg = self.cfg
+        n, a, e = cfg.receptive_field, cfg.ppr_alpha, cfg.ppr_eps
+        targets = [int(t) for t in targets]
+        if self.nbr_cache is None:
+            return (ini_batch(self.graph, targets, n, a, e,
+                              self.num_threads), 0, 0)
+        found, missing = {}, []
+        for t in dict.fromkeys(targets):          # unique, order-kept
+            nl = self.nbr_cache.get(nbr_key(t, n, a, e))
+            if nl is None:
+                missing.append(t)
+            else:
+                found[t] = nl
+        if missing:
+            gen = self.nbr_cache.generation   # pre-computation epoch: an
+            # invalidate() landing mid-push makes put() drop the result
+            for t, nl in zip(missing, ini_batch(self.graph, missing, n,
+                                                a, e, self.num_threads)):
+                self.nbr_cache.put(nbr_key(t, n, a, e), nl, generation=gen)
+                found[t] = nl
+        return ([found[t] for t in targets],
+                len(found) - len(missing), len(missing))
+
+    def prepare(self, targets) -> Dict[str, np.ndarray]:
+        from repro.core.subgraph import batch_from_node_lists
+        node_lists, hits, misses = self._node_lists(targets)
+        src = self._fsource
         sb = batch_from_node_lists(self.graph, targets, node_lists,
-                                   self.cfg.receptive_field, self.e_pad)
-        d = self.device_batch(sb)
-        if self.dedup_features:
-            uniq, idx, ratio = packed_features(
-                node_lists, self.graph, self.cfg.receptive_field)
-            self.last_dedup_ratio = ratio
-            del d["feats"]               # ship packed form instead
-            d["uniq_feats"], d["feat_idx"] = uniq, idx
+                                   self.cfg.receptive_field, self.e_pad,
+                                   build_feats=src.needs_host_feats)
+        d = self.device_batch(sb, include_feats=False)
+        payload, dedup = src.host_payload(
+            node_lists, self.cfg.receptive_field,
+            sb.feats if src.needs_host_feats else None)
+        if dedup is not None:
+            self.last_dedup_ratio = dedup
+        # transfer accounting: what this strategy ships vs. what the dense
+        # baseline would (non-feature arrays + a full [C, N, f_pad] block)
+        other = sum(int(a.nbytes) for a in d.values())
+        shipped = other + sum(int(a.nbytes) for a in payload.values())
+        dense = other + len(node_lists) * self.cfg.receptive_field \
+            * self.f_pad * 4
+        d.update(payload)
+        self.scheduler.note_host_metrics(
+            bytes_shipped=shipped, bytes_dense=dense, cache_hits=hits,
+            cache_misses=misses, dedup_ratio=dedup)
         return d
 
-    def device_batch(self, sb: SubgraphBatch) -> Dict[str, np.ndarray]:
-        d = dict(feats=sb.feats, adj=sb.adj, adj_mean=sb.adj_mean,
-                 mask=sb.mask)
-        if self.f_pad != self.cfg.f_in:
-            d["feats"] = np.pad(sb.feats,
-                                ((0, 0), (0, 0),
-                                 (0, self.f_pad - self.cfg.f_in)))
+    def device_batch(self, sb: SubgraphBatch,
+                     include_feats: bool = True) -> Dict[str, np.ndarray]:
+        d = dict(adj=sb.adj, adj_mean=sb.adj_mean, mask=sb.mask)
+        if include_feats:
+            d["feats"] = self._pad_feature_dim(sb.feats)
         if self.mode == "sg":
             n = sb.n
             self_w = sb.adj[:, np.arange(n), np.arange(n)]
@@ -178,22 +250,15 @@ class DecoupledEngine:
         return d
 
     def run_device(self, device_batch) -> jax.Array:
-        if "uniq_feats" in device_batch:
-            device_batch = dict(device_batch)
-            uniq = jnp.asarray(device_batch.pop("uniq_feats"))
-            idx = jnp.asarray(device_batch.pop("feat_idx"))
-            feats = jnp.take(uniq, idx, axis=0)      # device-side gather
-            if self.f_pad != self.cfg.f_in:
-                feats = jnp.pad(feats, ((0, 0), (0, 0),
-                                        (0, self.f_pad - self.cfg.f_in)))
-            device_batch["feats"] = feats
-        if self.f_pad != self.cfg.f_in and self.cfg.f_in == \
-                device_batch["feats"].shape[-1]:
-            device_batch = dict(device_batch)
-            device_batch["feats"] = np.pad(
-                device_batch["feats"],
-                ((0, 0), (0, 0), (0, self.f_pad - self.cfg.f_in)))
-        return self._infer(self.params, device_batch)
+        db = dict(device_batch)
+        src = self._fsource
+        if all(k in db for k in src.payload_keys):
+            feats = src.device_feats({k: db.pop(k)
+                                      for k in src.payload_keys})
+        else:       # externally built dense batch (e.g. device_batch())
+            feats = db["feats"]
+        db["feats"] = self._pad_feature_dim(feats)
+        return self._infer(self.params, db)
 
     # -- end-to-end ----------------------------------------------------------
     def pad_targets(self, targets: np.ndarray) -> np.ndarray:
@@ -225,6 +290,33 @@ class DecoupledEngine:
         emb = np.concatenate([np.asarray(o) for o in outs], axis=0)
         return InferenceResult(embeddings=emb[:len(targets)], stats=stats,
                                decision=self.decision)
+
+    # -- store hooks ---------------------------------------------------------
+    def invalidate(self, vertices) -> int:
+        """Graph-update hook, both store levels: drop every cached
+        neighborhood whose SELECTED top-N list contains any of
+        ``vertices`` (see NeighborhoodCache.invalidate for the
+        approximation this implies), and re-upload those vertices'
+        device-resident feature rows from ``graph.features`` (so feature
+        mutations take effect without an engine rebuild). Returns the
+        number of cache entries dropped."""
+        if hasattr(self._fsource, "refresh_features"):
+            self._fsource.refresh_features(vertices)
+        if self.nbr_cache is None:
+            return 0
+        return self.nbr_cache.invalidate(vertices)
+
+    def store_report(self) -> dict:
+        """Cache/transfer state of this deployment's store subsystem."""
+        pol = self.store_policy.describe()
+        if self.nbr_cache is not None:
+            # resolve the policy's "auto" pin set to what is actually
+            # evict-exempt in this deployment
+            pol["pinned_count"] = self.nbr_cache.num_pinned_targets
+        r = {"policy": pol, "features": self._fsource.report()}
+        if self.nbr_cache is not None:
+            r["nbr_cache"] = self.nbr_cache.stats()
+        return r
 
     def close(self):
         self.scheduler.close()

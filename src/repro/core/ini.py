@@ -17,7 +17,7 @@ from typing import List, Tuple
 
 import numpy as np
 
-from repro.graphs.csr import CSRGraph
+from repro.graphs.csr import CSRGraph, _gather_ranges
 
 
 def ppr_local_push(g: CSRGraph, target: int, alpha: float = 0.15,
@@ -39,9 +39,14 @@ def ppr_local_push(g: CSRGraph, target: int, alpha: float = 0.15,
     p = np.zeros(g.num_vertices, np.float64)
     r = np.zeros(g.num_vertices, np.float64)
     r[target] = 1.0
-    touched = {target}
+    # touched bookkeeping is a boolean mask + a growing id array: the mask
+    # answers "seen before?" in O(1) numpy and tarr enumerates the touched
+    # set without per-iteration Python-object traffic (set / np.fromiter)
+    touched = np.zeros(g.num_vertices, bool)
+    touched[target] = True
+    tarr = np.array([target], dtype=np.int64)
     thresh = np.maximum(deg, 1) * eps
-    frontier = np.array([target], dtype=np.int64)
+    frontier = tarr
     for _ in range(max_iters):
         mask = r[frontier] >= thresh[frontier]
         active = frontier[mask]
@@ -59,16 +64,18 @@ def ppr_local_push(g: CSRGraph, target: int, alpha: float = 0.15,
             continue
         counts = counts[has_nbrs]
         shares = ((1.0 - alpha) * r_act[has_nbrs]) / counts
-        nbrs = np.concatenate([g.indices[g.indptr[u]:g.indptr[u + 1]]
-                               for u in act])
+        nbrs = _gather_ranges(g.indices, g.indptr[act], g.indptr[act + 1],
+                              int(counts.sum()))
         np.add.at(r, nbrs, np.repeat(shares, counts))
-        touched.update(int(x) for x in np.unique(nbrs))
+        uniq = np.unique(nbrs)
+        new = uniq[~touched[uniq]]
+        if len(new):
+            touched[new] = True
+            tarr = np.concatenate([tarr, new])
         # next frontier = all touched vertices above threshold
-        tarr = np.fromiter(touched, dtype=np.int64, count=len(touched))
         frontier = tarr[r[tarr] >= thresh[tarr]]
         if len(frontier) == 0:
             break
-    tarr = np.fromiter(touched, dtype=np.int64, count=len(touched))
     scores = p[tarr] + alpha * r[tarr]   # fold residual for a tighter est.
     return tarr, scores
 

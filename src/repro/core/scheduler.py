@@ -40,6 +40,15 @@ class SchedulerStats:
     n_batches: int = 0
     host_times: List[float] = field(default_factory=list)
     device_times: List[float] = field(default_factory=list)
+    # host->device transfer accounting (the paper's t_load, Eq. 2): what
+    # actually crossed the link vs. what the dense baseline would ship,
+    # plus the store's neighborhood-cache outcome — fed by the host_fn
+    # via ``PipelineScheduler.note_host_metrics``.
+    bytes_shipped: int = 0
+    bytes_dense: int = 0
+    cache_hits: int = 0
+    cache_misses: int = 0
+    last_dedup_ratio: Optional[float] = None
 
     @property
     def overlap_fraction(self) -> float:
@@ -51,12 +60,27 @@ class SchedulerStats:
             return 0.0 if serial <= self.t_wall else 1.0
         return min(1.0, (serial - self.t_wall) / lo)
 
+    @property
+    def cache_hit_rate(self) -> float:
+        total = self.cache_hits + self.cache_misses
+        return self.cache_hits / total if total else 0.0
+
+    @property
+    def transfer_ratio(self) -> float:
+        """Bytes actually shipped / dense-baseline bytes (< 1 = savings)."""
+        return self.bytes_shipped / self.bytes_dense if self.bytes_dense \
+            else 1.0
+
     def summary(self) -> dict:
         return {"t_wall": self.t_wall, "t_host": self.t_host_total,
                 "t_device": self.t_device_total,
                 "t_init": self.t_initialization,
                 "overlap": round(self.overlap_fraction, 3),
-                "batches": self.n_batches}
+                "batches": self.n_batches,
+                "bytes_shipped": self.bytes_shipped,
+                "transfer_ratio": round(self.transfer_ratio, 4),
+                "cache_hit_rate": round(self.cache_hit_rate, 4),
+                "dedup_ratio": self.last_dedup_ratio}
 
     def record(self, t_host: float, t_device: float):
         if not self.host_times:
@@ -206,6 +230,24 @@ class PipelineScheduler:
             raise RuntimeError("scheduler is closed") from e
         return t
 
+    def note_host_metrics(self, *, bytes_shipped: int = 0,
+                          bytes_dense: int = 0, cache_hits: int = 0,
+                          cache_misses: int = 0,
+                          dedup_ratio: Optional[float] = None):
+        """Accumulate transfer/cache counters for one prepared batch.
+
+        Called by the host_fn itself (it alone knows what it shipped and
+        what the dense baseline would have been); safe from the host pool
+        threads and from run()'s serial path alike."""
+        with self._lock:
+            s = self.stats
+            s.bytes_shipped += int(bytes_shipped)
+            s.bytes_dense += int(bytes_dense)
+            s.cache_hits += int(cache_hits)
+            s.cache_misses += int(cache_misses)
+            if dedup_ratio is not None:
+                s.last_dedup_ratio = float(dedup_ratio)
+
     def flush(self, timeout: Optional[float] = None):
         """Block until every submitted batch has completed."""
         with self._idle:
@@ -293,6 +335,9 @@ class PipelineScheduler:
         cumulative ``self.stats``.
         """
         call = SchedulerStats(n_batches=len(items))
+        with self._lock:       # store-metric baseline for call-local delta
+            base = (self.stats.bytes_shipped, self.stats.bytes_dense,
+                    self.stats.cache_hits, self.stats.cache_misses)
         t0 = time.perf_counter()
         if not overlap or self.depth == 1:
             outs = []
@@ -320,4 +365,13 @@ class PipelineScheduler:
         call.t_device_total = sum(call.device_times)
         call.t_initialization = call.host_times[0] if call.host_times \
             else 0.0
+        with self._lock:
+            # this call's share of the note_host_metrics counters (exact
+            # when run() has the scheduler to itself; concurrent submit()
+            # traffic from other threads folds into the same window)
+            call.bytes_shipped = self.stats.bytes_shipped - base[0]
+            call.bytes_dense = self.stats.bytes_dense - base[1]
+            call.cache_hits = self.stats.cache_hits - base[2]
+            call.cache_misses = self.stats.cache_misses - base[3]
+            call.last_dedup_ratio = self.stats.last_dedup_ratio
         return outs, call

@@ -60,8 +60,12 @@ class SubgraphBatch:
 
 
 def build_subgraph(g: CSRGraph, nodes: np.ndarray, n_pad: int,
-                   e_pad: Optional[int] = None):
-    """One induced subgraph, padded to n_pad vertices (and e_pad edges)."""
+                   e_pad: Optional[int] = None, with_feats: bool = True):
+    """One induced subgraph, padded to n_pad vertices (and e_pad edges).
+
+    ``with_feats=False`` skips host-side feature materialization entirely
+    (feats comes back [n_pad, 0]) — used when a feature-store strategy
+    ships indices instead, so the dense block is never allocated."""
     k = len(nodes)
     assert k <= n_pad
     src, dst = subgraph_edges(g, nodes)
@@ -79,8 +83,10 @@ def build_subgraph(g: CSRGraph, nodes: np.ndarray, n_pad: int,
     np.add.at(indeg, dst, 1.0)
     nz = indeg[dst] > 0
     adj_mean[dst[nz], src[nz]] = (1.0 / indeg[dst[nz]]).astype(np.float32)
-    feats = np.zeros((n_pad, g.feature_dim), np.float32)
-    feats[:k] = g.features[nodes]
+    feats = np.zeros((n_pad, g.feature_dim if with_feats else 0),
+                     np.float32)
+    if with_feats:
+        feats[:k] = g.features[nodes]
     mask = np.zeros(n_pad, np.float32)
     mask[:k] = 1.0
     e = len(src)
@@ -143,10 +149,11 @@ def build_batch(g: CSRGraph, targets, n: int, e_pad: Optional[int] = None,
 
 
 def batch_from_node_lists(g: CSRGraph, targets, node_lists: List[np.ndarray],
-                          n: int, e_pad: int) -> SubgraphBatch:
+                          n: int, e_pad: int,
+                          build_feats: bool = True) -> SubgraphBatch:
     C = len(node_lists)
-    f = g.feature_dim
-    feats = np.zeros((C, n, f), np.float32)
+    f = g.feature_dim if build_feats else 0   # [C, n, 0]: shape carriers
+    feats = np.zeros((C, n, f), np.float32)   # (n, batch_size) stay valid
     adj = np.zeros((C, n, n), np.float32)
     adj_mean = np.zeros((C, n, n), np.float32)
     mask = np.zeros((C, n), np.float32)
@@ -158,7 +165,8 @@ def batch_from_node_lists(g: CSRGraph, targets, node_lists: List[np.ndarray],
     dropped = 0
     for i, nodes in enumerate(node_lists):
         (feats[i], adj[i], adj_mean[i], mask[i], es[i], ed[i], ew[i],
-         nv[i], ne[i], d) = build_subgraph(g, nodes[:n], n, e_pad)
+         nv[i], ne[i], d) = build_subgraph(g, nodes[:n], n, e_pad,
+                                           with_feats=build_feats)
         dropped += d
     return SubgraphBatch(feats=feats, adj=adj, adj_mean=adj_mean, mask=mask,
                          edge_src=es, edge_dst=ed, edge_w=ew,

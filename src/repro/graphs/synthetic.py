@@ -83,3 +83,19 @@ def get_graph(name: str, scale: float = 1.0, seed: int = 0) -> CSRGraph:
     if key not in _CACHE:
         _CACHE[key] = make_graph(DATASETS[name], scale, seed)
     return _CACHE[key]
+
+
+def zipf_traffic(g: CSRGraph, n_requests: int, a: float = 1.1,
+                 seed: int = 0) -> np.ndarray:
+    """Zipf(a) popularity-skewed request targets over a finite support,
+    with popularity rank following vertex degree (hubs are hot — the
+    realistic and cacheable serving regime the store subsystem targets).
+    Exact finite-support sampling via inverse-CDF weights. THE one traffic
+    model shared by bench_store, examples, and cache tests."""
+    rng = np.random.default_rng(seed)
+    v = g.num_vertices
+    probs = 1.0 / np.arange(1, v + 1, dtype=np.float64) ** a
+    probs /= probs.sum()
+    ranks = rng.choice(v, size=n_requests, p=probs)
+    by_degree = np.argsort(-g.degrees.astype(np.int64), kind="stable")
+    return by_degree[ranks]

@@ -160,6 +160,13 @@ class _ModelLane:
         r["overlap"] = round(sched.overlap_fraction, 3)
         r["sched_batches"] = sched.n_batches
         r["kind"] = self.engine.cfg.kind
+        # store subsystem: transfer + cache observability (paper t_load /
+        # t_pre — what the two-level store saved this lane)
+        r["bytes_shipped"] = sched.bytes_shipped
+        r["transfer_ratio"] = round(sched.transfer_ratio, 4)
+        r["cache_hit_rate"] = round(sched.cache_hit_rate, 4)
+        r["dedup_ratio"] = sched.last_dedup_ratio
+        r["store"] = self.engine.store_report()
         return r
 
 

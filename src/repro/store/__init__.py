@@ -1,0 +1,13 @@
+"""Two-level caching subsystem: device feature store + host neighborhood
+cache (turns per-batch "recompute + reship everything" into "look up +
+ship indices" — see policy.py for the knobs)."""
+from repro.store.feature_store import (DenseFeatureShipper,
+                                       DeviceFeatureStore,
+                                       PackedFeatureShipper,
+                                       build_feature_source)
+from repro.store.nbr_cache import NeighborhoodCache, nbr_key
+from repro.store.policy import StorePolicy
+
+__all__ = ["StorePolicy", "NeighborhoodCache", "nbr_key",
+           "DeviceFeatureStore", "PackedFeatureShipper",
+           "DenseFeatureShipper", "build_feature_source"]

@@ -1,0 +1,247 @@
+"""Device feature store: keep feature rows resident in device memory so a
+batch ships int32 index maps instead of dense [C, N, f] tensors.
+
+Three strategies share one interface (``host_payload`` on the host side of
+the pipeline, ``device_feats`` on the device side), so the engine's
+prepare/run_device stay strategy-agnostic:
+
+  * ``DenseFeatureShipper``  — the baseline: every batch carries its own
+    feature rows (the paper's t_load paid in full).
+  * ``PackedFeatureShipper`` — cross-target dedup (the pre-existing
+    ``packed_features`` path as a store strategy): unique rows once per
+    batch plus an index map.
+  * ``DeviceFeatureStore``   — rows pinned in device HBM once at engine
+    start. When the matrix exceeds ``budget_bytes`` only the hottest rows
+    (by degree, or a caller-supplied score such as accumulated PPR mass)
+    are resident; cold rows fall back to a host partition and ship as a
+    small per-batch miss block appended behind the resident table.
+
+All strategies emit feature rows already padded to the engine's MXU
+feature width (``f_pad``), so padding is decided exactly once.
+"""
+from __future__ import annotations
+
+import threading
+from typing import Dict, List, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.graphs.csr import CSRGraph
+from repro.store.nbr_cache import as_vertex_ids
+
+
+def pad_feature_dim(feats, f_pad: int):
+    """THE one feature-padding implementation: zero-pad the trailing dim
+    to f_pad (MXU alignment — exact, because the matching layer0 weight
+    rows are zero). numpy or jax arrays, any leading shape; no-op when
+    already at f_pad. Every padding site (engine and store strategies)
+    routes through here."""
+    pad = f_pad - feats.shape[-1]
+    if pad == 0:
+        return feats
+    if pad < 0:
+        raise ValueError(f"feature dim {feats.shape[-1]} exceeds "
+                         f"f_pad={f_pad}")
+    widths = [(0, 0)] * (feats.ndim - 1) + [(0, pad)]
+    xp = jnp if isinstance(feats, jax.Array) else np
+    return xp.pad(feats, widths)
+
+
+class DenseFeatureShipper:
+    """Baseline: ship the dense [C, N, f_pad] block every batch."""
+
+    name = "dense"
+    needs_host_feats = True
+    payload_keys = ("feats",)
+
+    def __init__(self, graph: CSRGraph, f_pad: int):
+        self.graph, self.f_pad = graph, f_pad
+
+    def host_payload(self, node_lists: List[np.ndarray], n: int,
+                     feats: Optional[np.ndarray]
+                     ) -> Tuple[Dict[str, np.ndarray], Optional[float]]:
+        return {"feats": pad_feature_dim(feats, self.f_pad)}, None
+
+    def device_feats(self, payload: Dict) -> jax.Array:
+        return jnp.asarray(payload["feats"])
+
+    def report(self) -> dict:
+        return {"strategy": self.name}
+
+
+class PackedFeatureShipper:
+    """Cross-target dedup: unique rows [U, f_pad] + int32 index map [C, N].
+
+    PPR favors hubs, so the same vertices recur across a batch's subgraphs;
+    each unique row crosses the link once. ``ratio`` (packed/dense bytes)
+    is surfaced per batch as the dedup ratio."""
+
+    name = "packed"
+    needs_host_feats = False
+    payload_keys = ("uniq_feats", "feat_idx")
+
+    def __init__(self, graph: CSRGraph, f_pad: int):
+        self.graph, self.f_pad = graph, f_pad
+
+    def host_payload(self, node_lists, n, feats=None):
+        from repro.core.subgraph import packed_features
+        uniq, idx, _ = packed_features(node_lists, self.graph, n)
+        # ship at f_in — the device pads AFTER the gather (run_device's
+        # pad_feature_dim), so the link never carries pad zeros. The
+        # ratio denominator uses f_pad because that is what the dense
+        # strategy ships, keeping dedup_ratio consistent with the
+        # scheduler's transfer_ratio under impl="pallas"
+        ratio = (uniq.nbytes + idx.nbytes) / \
+            (idx.shape[0] * idx.shape[1] * self.f_pad * 4)
+        return {"uniq_feats": uniq, "feat_idx": idx}, ratio
+
+    def device_feats(self, payload):
+        return jnp.take(jnp.asarray(payload["uniq_feats"]),
+                        jnp.asarray(payload["feat_idx"]), axis=0)
+
+    def report(self) -> dict:
+        return {"strategy": self.name}
+
+
+class DeviceFeatureStore:
+    """Feature rows resident in device memory; batches ship slot maps.
+
+    Layout: one device table [R + 1, f_pad]; slot 0 is the zero pad row
+    (masked subgraph slots), slots 1..R are resident vertices. A batch's
+    payload is a [C, N] int32 slot map plus a [M, f_pad] miss block of
+    host-partition rows, addressed as slots R+1..R+M for that batch only.
+
+    ``budget_bytes=None`` pins the whole matrix (full-resident). Otherwise
+    the top rows under the budget by ``hot_scores`` (default: degree — the
+    PPR-mass proxy that needs no traffic history) are resident and the rest
+    stay host-side.
+    """
+
+    name = "resident"
+    needs_host_feats = False
+    payload_keys = ("feat_slots", "miss_feats")
+
+    def __init__(self, graph: CSRGraph, f_pad: int, *,
+                 budget_bytes: Optional[int] = None,
+                 hot_scores: Optional[np.ndarray] = None):
+        self.graph, self.f_pad = graph, f_pad
+        v = graph.num_vertices
+        row_bytes = f_pad * 4
+        if budget_bytes is None or budget_bytes >= (v + 1) * row_bytes:
+            resident_ids = np.arange(v, dtype=np.int64)
+        else:
+            k = min(v, max(0, budget_bytes // row_bytes - 1))
+            score = np.asarray(graph.degrees if hot_scores is None
+                               else hot_scores, np.float64)
+            if len(score) != v:
+                raise ValueError("hot_scores must have one entry per vertex")
+            resident_ids = np.sort(np.argpartition(score, -k)[-k:]) if k \
+                else np.empty(0, np.int64)
+        # slot_of[v]: 1-based slot in the device table, -1 = host partition
+        self.slot_of = np.full(v, -1, np.int64)
+        self.slot_of[resident_ids] = np.arange(1, len(resident_ids) + 1)
+        table = np.zeros((len(resident_ids) + 1, f_pad), np.float32)
+        if len(resident_ids):
+            table[1:] = pad_feature_dim(graph.features[resident_ids],
+                                        f_pad)
+        self.table = jax.device_put(table)      # resident once, at start
+        self.num_resident = int(len(resident_ids))
+        self.device_bytes = int(table.nbytes)
+        self._lock = threading.Lock()
+        self.lookups = 0          # vertex slots resolved (excl. padding)
+        self.resident_lookups = 0  # served from the device table
+        self.miss_rows_shipped = 0  # host-partition rows shipped
+
+    @property
+    def resident_fraction(self) -> float:
+        return self.num_resident / max(1, self.graph.num_vertices)
+
+    def host_payload(self, node_lists, n, feats=None):
+        c = len(node_lists)
+        ids = np.full((c, n), -1, np.int64)
+        for i, nl in enumerate(node_lists):
+            k = min(len(nl), n)
+            ids[i, :k] = nl[:k]
+        valid = ids >= 0
+        slots = np.zeros((c, n), np.int64)
+        slots[valid] = self.slot_of[ids[valid]]
+        missing = valid & (slots < 0)
+        miss_ids = np.unique(ids[missing])
+        if len(miss_ids):
+            slots[missing] = self.num_resident + 1 + \
+                np.searchsorted(miss_ids, ids[missing])
+            miss_feats = pad_feature_dim(self.graph.features[miss_ids],
+                                         self.f_pad)
+        else:
+            miss_feats = np.zeros((0, self.f_pad), np.float32)
+        with self._lock:
+            self.lookups += int(valid.sum())
+            self.resident_lookups += int(valid.sum() - missing.sum())
+            self.miss_rows_shipped += int(len(miss_ids))
+        return {"feat_slots": slots.astype(np.int32),
+                "miss_feats": miss_feats}, None
+
+    def device_feats(self, payload):
+        slots = jnp.asarray(payload["feat_slots"])
+        miss = payload["miss_feats"]
+        # two gathers + select, NOT concatenate: concatenating would copy
+        # the whole resident table per batch (O(R * f_pad) device traffic
+        # and ~2x the HBM budget transiently — the budget exists because
+        # the table barely fits)
+        res = jnp.take(self.table, jnp.clip(slots, 0, self.num_resident),
+                       axis=0)
+        if miss.shape[0] == 0:
+            return res
+        mi = jnp.clip(slots - self.num_resident - 1, 0, miss.shape[0] - 1)
+        m = jnp.take(jnp.asarray(miss), mi, axis=0)
+        return jnp.where((slots > self.num_resident)[..., None], m, res)
+
+    def refresh_features(self, vertices) -> int:
+        """Re-upload the resident rows of ``vertices`` from the (updated)
+        host feature matrix — the feature half of the graph-update hook.
+        Host-partition vertices need nothing: their rows ship fresh from
+        ``graph.features`` on every miss. Returns rows re-uploaded."""
+        ids = as_vertex_ids(vertices)
+        slots = self.slot_of[ids]
+        res = slots > 0
+        if not res.any():
+            return 0
+        rows = pad_feature_dim(self.graph.features[ids[res]], self.f_pad)
+        with self._lock:      # table swap is read-modify-write: without
+            # the lock, concurrent invalidate() calls lose each other's
+            # re-uploads (readers are safe — jax arrays are immutable)
+            self.table = self.table.at[jnp.asarray(slots[res])].set(
+                jnp.asarray(rows))
+        return int(res.sum())
+
+    def report(self) -> dict:
+        with self._lock:
+            lk, res, miss = (self.lookups, self.resident_lookups,
+                             self.miss_rows_shipped)
+        return {"strategy": self.name,
+                "resident_rows": self.num_resident,
+                "resident_fraction": round(self.resident_fraction, 4),
+                "device_bytes": self.device_bytes,
+                "lookups": lk,
+                "resident_hit_rate": round(res / lk, 4) if lk else 0.0,
+                "miss_rows_shipped": miss}
+
+
+def build_feature_source(graph: CSRGraph, policy, f_pad: int,
+                         hot_scores: Optional[np.ndarray] = None):
+    """Strategy factory keyed on ``StorePolicy.features``. ``hot_scores``
+    defaults to the policy's own (e.g. accumulated PPR mass supplied at
+    deployment time); vertex degree when neither is given."""
+    if policy.features == "dense":
+        return DenseFeatureShipper(graph, f_pad)
+    if policy.features == "packed":
+        return PackedFeatureShipper(graph, f_pad)
+    if policy.features == "resident":
+        if hot_scores is None and policy.hot_scores is not None:
+            hot_scores = np.asarray(policy.hot_scores, np.float64)
+        return DeviceFeatureStore(graph, f_pad,
+                                  budget_bytes=policy.hbm_budget_bytes,
+                                  hot_scores=hot_scores)
+    raise ValueError(f"unknown feature strategy {policy.features!r}")

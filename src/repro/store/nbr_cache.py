@@ -1,0 +1,176 @@
+"""Host neighborhood cache: per-target PPR node lists, LRU + pinned hot set.
+
+INI (PPR local push) is the dominant host cost per target (paper t_pre,
+Eq. 2). Under skewed traffic the same targets recur, and their PPR
+neighborhoods are deterministic in ``(target, N, alpha, eps)`` — so the
+push result is cached under exactly that key. Entries for targets in the
+pinned hot set never evict; everything else is LRU over ``capacity``
+entries. ``invalidate(vertices)`` drops every cached neighborhood that
+contains an updated vertex (a graph update at v changes the PPR of any
+target whose neighborhood reaches v), forcing recompute on next lookup.
+
+Thread-safe: the engine's prepare runs on the scheduler's host pool, so
+several batches may probe the cache concurrently. Two concurrent misses on
+the same target may both compute (benign stampede); last put wins. A PPR
+computation in flight across an ``invalidate()`` must NOT insert its
+(possibly pre-update) result: callers snapshot ``generation`` before
+computing and pass it to ``put()``, which drops the insert when any
+invalidation happened in between.
+"""
+from __future__ import annotations
+
+import threading
+from collections import OrderedDict
+from typing import Hashable, Iterable, Optional, Tuple
+
+import numpy as np
+
+Key = Tuple[int, int, float, float]       # (target, N, alpha, eps)
+
+
+def nbr_key(target: int, n: int, alpha: float, eps: float) -> Key:
+    return (int(target), int(n), float(alpha), float(eps))
+
+
+def as_vertex_ids(vertices) -> np.ndarray:
+    """Coerce a scalar, iterable, or array of vertex ids to unique sorted
+    int64 — the shared normalization for both invalidation levels
+    (neighborhood cache and device feature store)."""
+    if not isinstance(vertices, np.ndarray):
+        vertices = list(vertices) if np.iterable(vertices) else [vertices]
+    return np.unique(np.asarray(vertices, dtype=np.int64))
+
+
+class NeighborhoodCache:
+    """LRU + pinned-hot-set cache of per-target PPR node lists."""
+
+    def __init__(self, capacity: int = 4096,
+                 pinned_targets: Optional[Iterable[int]] = None):
+        if capacity < 1:
+            raise ValueError("capacity must be >= 1")
+        self.capacity = capacity
+        self._pin_ids = frozenset(
+            int(t) for t in (() if pinned_targets is None
+                             else pinned_targets))
+        self._pinned: dict = {}               # never evicted
+        self._lru: "OrderedDict[Hashable, np.ndarray]" = OrderedDict()
+        self._lock = threading.Lock()
+        self.hits = 0
+        self.misses = 0
+        self.evictions = 0
+        self.invalidations = 0                # entries dropped, not calls
+        self._gen = 0                         # bumped by invalidate/clear
+
+    # -- core ----------------------------------------------------------------
+    def get(self, key: Key) -> Optional[np.ndarray]:
+        with self._lock:
+            nl = self._pinned.get(key)
+            if nl is None:
+                nl = self._lru.get(key)
+                if nl is not None:
+                    self._lru.move_to_end(key)
+            if nl is None:
+                self.misses += 1
+                return None
+            self.hits += 1
+            return nl
+
+    def put(self, key: Key, node_list: np.ndarray,
+            generation: Optional[int] = None):
+        """Insert a computed neighborhood. Pass the ``generation`` read
+        BEFORE the computation started: if an invalidate() ran in between,
+        the result may reflect the pre-update graph and is dropped (the
+        next lookup recomputes)."""
+        nl = np.array(node_list)              # copy: freezing an aliased
+        nl.flags.writeable = False            # array would make the
+        # caller's own node list read-only as a side effect
+        with self._lock:
+            if generation is not None and generation != self._gen:
+                return
+            if key[0] in self._pin_ids:
+                self._pinned[key] = nl
+                return
+            self._lru[key] = nl
+            self._lru.move_to_end(key)
+            while len(self._lru) > self.capacity:
+                self._lru.popitem(last=False)
+                self.evictions += 1
+
+    def invalidate(self, vertices) -> int:
+        """Drop every cached neighborhood whose SELECTED top-N list
+        contains any of ``vertices`` (pinned entries included). Returns
+        the number of entries dropped.
+
+        Approximation: cached values are the truncated top-N selection,
+        not the full PPR touched set — an update at a vertex that a
+        target's push reached but that fell below its top-N cutoff is not
+        detected, even though it could nudge that target's scores enough
+        to change its true top-N. Callers applying large or structural
+        graph updates should ``clear()`` instead; exact invalidation
+        would require caching each push's full frontier (ROADMAP:
+        graph-update streaming)."""
+        vs = as_vertex_ids(vertices)
+        # the O(entries * N) membership scan runs OUTSIDE the lock so
+        # concurrent serving-path get/put calls don't stall behind a
+        # graph update; the generation bump (taken first) keeps any
+        # in-flight pre-update computation from landing afterwards
+        with self._lock:
+            self._gen += 1
+            snapshot = [(store, list(store.items()))
+                        for store in (self._pinned, self._lru)]
+        stale = [(store, k, nl) for store, items in snapshot
+                 for k, nl in items
+                 if np.isin(nl, vs, assume_unique=False).any()]
+        dropped = 0
+        with self._lock:
+            for store, k, nl in stale:
+                # identity check: a fresh post-update recompute may have
+                # replaced the entry while we scanned — keep that one
+                if store.get(k) is nl:
+                    del store[k]
+                    dropped += 1
+            self.invalidations += dropped
+        return dropped
+
+    def clear(self):
+        with self._lock:
+            self._gen += 1
+            self._pinned.clear()
+            self._lru.clear()
+
+    @property
+    def generation(self) -> int:
+        """Invalidation epoch — snapshot before a miss's PPR computation
+        and hand to put()."""
+        with self._lock:
+            return self._gen
+
+    # -- introspection -------------------------------------------------------
+    def __len__(self) -> int:
+        with self._lock:
+            return len(self._pinned) + len(self._lru)
+
+    def __contains__(self, key: Key) -> bool:
+        with self._lock:
+            return key in self._pinned or key in self._lru
+
+    @property
+    def num_pinned_targets(self) -> int:
+        """Size of the configured evict-exempt target set (not the number
+        of pinned entries currently cached — see stats())."""
+        return len(self._pin_ids)
+
+    @property
+    def hit_rate(self) -> float:
+        total = self.hits + self.misses
+        return self.hits / total if total else 0.0
+
+    def stats(self) -> dict:
+        with self._lock:
+            return {"entries": len(self._pinned) + len(self._lru),
+                    "pinned_entries": len(self._pinned),
+                    "capacity": self.capacity,
+                    "hits": self.hits, "misses": self.misses,
+                    "hit_rate": round(self.hit_rate, 4),
+                    "evictions": self.evictions,
+                    "invalidations": self.invalidations}

@@ -1,0 +1,74 @@
+"""Store policy: how an engine deployment caches features and neighborhoods.
+
+The paper's end-to-end latency (Eq. 2) is t_pre + t_load + t_compute.
+``StorePolicy`` picks, per deployment, how much of t_pre (PPR local push)
+and t_load (host->device feature shipping) is traded for memory:
+
+  features:  "dense"    ship [C, N, f] feature rows every batch (baseline)
+             "packed"   cross-target dedup: unique rows + int32 index map
+             "resident" device feature store: rows pinned in device memory
+                        at engine start; batches ship int32 slot maps plus
+                        only the rows that miss the HBM budget partition
+  nbr_cache: "none"     re-run PPR local push per target every batch
+             "lru"      LRU cache of per-target PPR node lists
+             "pinned"   LRU plus a never-evicted hot set (top-degree
+                        targets by default, or an explicit pin list)
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import Optional, Tuple
+
+FEATURE_MODES = ("dense", "packed", "resident")
+NBR_CACHE_MODES = ("none", "lru", "pinned")
+
+
+@dataclass(frozen=True)
+class StorePolicy:
+    """Per-deployment caching configuration (see module docstring)."""
+    features: str = "dense"
+    hbm_budget_bytes: Optional[int] = None   # resident: None = whole matrix
+    # per-vertex residency score (array-like [V], e.g. accumulated PPR
+    # mass; None = vertex degree); compare=False keeps the frozen
+    # dataclass's ==/hash usable when an ndarray is supplied
+    hot_scores: Optional[object] = field(default=None, compare=False)
+    nbr_cache: str = "none"
+    nbr_capacity: int = 4096                 # LRU entries (excludes pins)
+    pinned_targets: Optional[Tuple[int, ...]] = None
+    pinned_count: int = 0                    # auto-pin top-degree targets
+
+    def __post_init__(self):
+        if self.features not in FEATURE_MODES:
+            raise ValueError(
+                f"features={self.features!r}, expected one of {FEATURE_MODES}")
+        if self.nbr_cache not in NBR_CACHE_MODES:
+            raise ValueError(f"nbr_cache={self.nbr_cache!r}, "
+                             f"expected one of {NBR_CACHE_MODES}")
+        if self.nbr_capacity < 1:
+            raise ValueError("nbr_capacity must be >= 1")
+        if self.pinned_count < 0:
+            raise ValueError("pinned_count must be >= 0")
+        if (self.pinned_targets is not None or self.pinned_count) \
+                and self.nbr_cache != "pinned":
+            raise ValueError("pinned_targets/pinned_count require "
+                             "nbr_cache='pinned'")
+        if (self.hbm_budget_bytes is not None
+                or self.hot_scores is not None) \
+                and self.features != "resident":
+            raise ValueError("hbm_budget_bytes/hot_scores require "
+                             "features='resident'")
+
+    def describe(self) -> dict:
+        if self.pinned_targets is not None:
+            pins = len(self.pinned_targets)
+        elif self.pinned_count:
+            pins = self.pinned_count
+        else:
+            # the engine resolves "auto" to a concrete top-degree pin set
+            # and overwrites this field in store_report()
+            pins = "auto" if self.nbr_cache == "pinned" else 0
+        return {"features": self.features,
+                "hbm_budget_bytes": self.hbm_budget_bytes,
+                "nbr_cache": self.nbr_cache,
+                "nbr_capacity": self.nbr_capacity,
+                "pinned_count": pins}

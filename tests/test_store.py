@@ -1,0 +1,301 @@
+"""Store subsystem: device feature store, neighborhood cache, StorePolicy
+wiring through engine/scheduler/server — plus the packed-features and
+pad_targets coverage the subsystem leans on."""
+import numpy as np
+import pytest
+
+from repro.core.engine import DecoupledEngine
+from repro.core.ini import ini_batch
+from repro.core.subgraph import batch_from_node_lists, packed_features
+from repro.gnn.model import GNNConfig
+from repro.graphs.synthetic import get_graph
+from repro.store import (DeviceFeatureStore, NeighborhoodCache, StorePolicy,
+                         nbr_key)
+
+
+@pytest.fixture(scope="module")
+def graph():
+    return get_graph("flickr", scale=0.005, seed=1)   # ~450 vertices
+
+
+@pytest.fixture(scope="module")
+def cfg(graph):
+    return GNNConfig(kind="gcn", n_layers=2, receptive_field=32,
+                     f_in=graph.feature_dim)
+
+
+@pytest.fixture(scope="module")
+def baseline(graph, cfg):
+    eng = DecoupledEngine(graph, cfg, batch_size=8)
+    emb = eng.infer(np.arange(24), overlap=False).embeddings
+    yield eng, emb
+    eng.close()
+
+
+class TestStorePolicy:
+    def test_rejects_unknown_modes(self):
+        with pytest.raises(ValueError):
+            StorePolicy(features="hbm")
+        with pytest.raises(ValueError):
+            StorePolicy(nbr_cache="fifo")
+        with pytest.raises(ValueError):
+            StorePolicy(nbr_capacity=0)
+        with pytest.raises(ValueError):       # pins need pinned mode
+            StorePolicy(nbr_cache="lru", pinned_targets=(1, 2))
+
+    def test_dedup_features_maps_to_packed(self, graph, cfg):
+        eng = DecoupledEngine(graph, cfg, batch_size=8,
+                              dedup_features=True)
+        assert eng.store_policy.features == "packed"
+        assert eng.dedup_features
+        eng.close()
+
+
+class TestPackedFeatures:
+    def test_reconstruction_exact_vs_dense(self, graph):
+        """uniq[idx] must reproduce the dense [C, N, f] block bitwise,
+        including zero rows for padded subgraph slots."""
+        n = 32
+        targets = list(range(12))
+        nls = ini_batch(graph, targets, n, num_threads=1)
+        sb = batch_from_node_lists(graph, targets, nls, n,
+                                   e_pad=4 * n * 8)
+        uniq, idx, ratio = packed_features(nls, graph, n)
+        np.testing.assert_array_equal(uniq[idx], sb.feats)
+        assert 0 < ratio < 1.0                    # hubs recur -> savings
+
+    def test_pad_row_is_zero(self, graph):
+        nls = ini_batch(graph, [0, 1], 32, num_threads=1)
+        uniq, idx, _ = packed_features(nls, graph, 32)
+        assert np.all(uniq[0] == 0)
+        short = min(len(nl) for nl in nls)
+        if short < 32:                            # padded slots hit row 0
+            assert np.all(idx[:, short:] >= 0)
+
+
+class TestPadTargets:
+    def test_pads_tail_by_repeating_last(self, baseline):
+        eng, _ = baseline
+        out = eng.pad_targets(np.array([3, 5]))
+        assert len(out) == eng.batch_size
+        assert list(out[:2]) == [3, 5] and np.all(out[2:] == 5)
+
+    def test_full_chunk_passthrough(self, baseline):
+        eng, _ = baseline
+        t = np.arange(eng.batch_size)
+        np.testing.assert_array_equal(eng.pad_targets(t), t)
+
+    def test_oversize_chunk_raises(self, baseline):
+        eng, _ = baseline
+        with pytest.raises(ValueError):
+            eng.pad_targets(np.arange(eng.batch_size + 1))
+
+    def test_empty_chunk_raises(self, baseline):
+        eng, _ = baseline
+        with pytest.raises(ValueError):
+            eng.pad_targets(np.array([], dtype=np.int64))
+
+
+class TestNeighborhoodCache:
+    def test_lru_eviction_order(self):
+        c = NeighborhoodCache(capacity=2)
+        k = [nbr_key(t, 8, 0.15, 1e-4) for t in range(3)]
+        c.put(k[0], np.array([0]))
+        c.put(k[1], np.array([1]))
+        assert c.get(k[0]) is not None            # 0 now most-recent
+        c.put(k[2], np.array([2]))                # evicts 1, not 0
+        assert c.evictions == 1
+        assert k[1] not in c and k[0] in c and k[2] in c
+
+    def test_pinned_never_evicts(self):
+        c = NeighborhoodCache(capacity=1, pinned_targets=[7])
+        kp = nbr_key(7, 8, 0.15, 1e-4)
+        c.put(kp, np.array([7]))
+        for t in range(20):
+            c.put(nbr_key(t, 8, 0.15, 1e-4), np.array([t]))
+        assert kp in c and c.get(kp) is not None
+
+    def test_invalidate_drops_touching_entries(self):
+        c = NeighborhoodCache(capacity=8, pinned_targets=[1])
+        c.put(nbr_key(1, 8, 0.15, 1e-4), np.array([1, 5, 9]))   # pinned
+        c.put(nbr_key(2, 8, 0.15, 1e-4), np.array([2, 5]))
+        c.put(nbr_key(3, 8, 0.15, 1e-4), np.array([3, 4]))
+        assert c.invalidate([5]) == 2             # pinned included
+        assert len(c) == 1 and c.invalidations == 2
+
+    def test_put_dropped_across_invalidate_generation(self):
+        """A neighborhood computed before an invalidate() must not land:
+        it may reflect the pre-update graph."""
+        c = NeighborhoodCache(capacity=8)
+        k = nbr_key(1, 8, 0.15, 1e-4)
+        gen = c.generation                    # miss -> start computing
+        c.invalidate([1])                     # graph update mid-flight
+        c.put(k, np.array([1, 2]), generation=gen)
+        assert k not in c                     # stale insert dropped
+        c.put(k, np.array([1, 2]), generation=c.generation)
+        assert k in c                         # fresh insert lands
+
+    def test_distinct_ppr_params_distinct_keys(self):
+        c = NeighborhoodCache(capacity=8)
+        c.put(nbr_key(1, 8, 0.15, 1e-4), np.array([1]))
+        assert c.get(nbr_key(1, 8, 0.15, 1e-5)) is None
+        assert c.get(nbr_key(1, 16, 0.15, 1e-4)) is None
+
+
+class TestEngineWithStore:
+    def _engine(self, graph, cfg, params, **store_kw):
+        return DecoupledEngine(graph, cfg, params=params, batch_size=8,
+                               store=StorePolicy(**store_kw))
+
+    def test_cached_equals_cold_bitwise(self, graph, cfg, baseline):
+        ref, emb0 = baseline
+        eng = self._engine(graph, cfg, ref.params, nbr_cache="lru",
+                           nbr_capacity=64)
+        t = np.arange(24)
+        cold = eng.infer(t, overlap=False).embeddings
+        cached = eng.infer(t, overlap=False).embeddings   # all cache hits
+        np.testing.assert_array_equal(cold, cached)
+        np.testing.assert_array_equal(cold, emb0)
+        assert eng.nbr_cache.hits > 0
+        s = eng.scheduler.stats
+        assert s.cache_hits == 24 and s.cache_misses == 24
+        eng.close()
+
+    def test_invalidate_forces_recompute(self, graph, cfg, baseline):
+        ref, _ = baseline
+        eng = self._engine(graph, cfg, ref.params, nbr_cache="lru")
+        t = np.arange(8)
+        a = eng.infer(t, overlap=False).embeddings
+        misses0 = eng.nbr_cache.misses
+        dropped = eng.invalidate(t)               # every entry has its
+        assert dropped == 8                       # target in its own list
+        b = eng.infer(t, overlap=False).embeddings
+        assert eng.nbr_cache.misses == misses0 + 8   # recomputed
+        np.testing.assert_array_equal(a, b)       # same graph -> same PPR
+        eng.close()
+
+    def test_resident_store_matches_dense(self, graph, cfg, baseline):
+        ref, emb0 = baseline
+        eng = self._engine(graph, cfg, ref.params, features="resident")
+        emb = eng.infer(np.arange(24), overlap=False).embeddings
+        np.testing.assert_allclose(emb, emb0, rtol=1e-6, atol=1e-6)
+        eng.close()
+
+    def test_resident_transfer_savings_at_least_4x(self, graph, cfg,
+                                                   baseline):
+        """Acceptance: full-resident store ships >= 4x fewer bytes than
+        the dense baseline per batch."""
+        ref, _ = baseline
+        eng = self._engine(graph, cfg, ref.params, features="resident")
+        eng.infer(np.arange(16), overlap=False)
+        s = eng.scheduler.stats
+        assert s.bytes_dense >= 4 * s.bytes_shipped
+        rep = eng.store_report()
+        assert rep["features"]["resident_fraction"] == 1.0
+        assert rep["features"]["miss_rows_shipped"] == 0
+        eng.close()
+
+    def test_partial_residency_miss_path(self, graph, cfg, baseline):
+        """HBM budget below the matrix: cold rows ship via the host
+        fallback partition, embeddings still match the dense engine."""
+        ref, emb0 = baseline
+        budget = 64 * (graph.feature_dim * 4)     # ~64 resident rows
+        eng = self._engine(graph, cfg, ref.params, features="resident",
+                           hbm_budget_bytes=budget)
+        emb = eng.infer(np.arange(24), overlap=False).embeddings
+        np.testing.assert_allclose(emb, emb0, rtol=1e-6, atol=1e-6)
+        rep = eng.store_report()["features"]
+        assert 0 < rep["resident_fraction"] < 1.0
+        assert rep["miss_rows_shipped"] > 0
+        eng.close()
+
+    def test_invalidate_refreshes_resident_rows(self, graph, cfg):
+        """Feature half of the graph-update hook: mutate graph.features,
+        invalidate, and the resident table must serve the new rows."""
+        import copy
+        g = copy.deepcopy(graph)              # don't mutate the fixture
+        eng = DecoupledEngine(g, cfg, batch_size=8,
+                              store=StorePolicy(features="resident",
+                                                nbr_cache="lru"))
+        t = np.arange(8)
+        before = eng.infer(t, overlap=False).embeddings
+        g.features[:8] += 1.0                 # feature update at targets
+        eng.invalidate(np.arange(8))
+        after = eng.infer(t, overlap=False).embeddings
+        assert np.abs(after - before).max() > 0
+        # fresh engine over the updated graph agrees -> rows were truly
+        # re-uploaded, not recomputed from a stale table
+        ref = DecoupledEngine(g, cfg, params=eng.params, batch_size=8)
+        np.testing.assert_allclose(
+            after, ref.infer(t, overlap=False).embeddings,
+            rtol=1e-6, atol=1e-6)
+        ref.close()
+        eng.close()
+
+    def test_packed_strategy_matches_dense(self, graph, cfg, baseline):
+        ref, emb0 = baseline
+        eng = self._engine(graph, cfg, ref.params, features="packed")
+        emb = eng.infer(np.arange(24), overlap=False).embeddings
+        np.testing.assert_array_equal(emb, emb0)
+        assert eng.last_dedup_ratio is not None
+        assert eng.scheduler.stats.last_dedup_ratio == \
+            eng.last_dedup_ratio
+        eng.close()
+
+    def test_hit_rate_at_zipf_steady_state(self, graph, cfg, baseline):
+        """Acceptance: >= 80% neighborhood-cache hit rate under Zipf(1.1)
+        once the stream has covered the popularity head."""
+        ref, _ = baseline
+        from repro.graphs.synthetic import zipf_traffic
+        eng = self._engine(graph, cfg, ref.params, nbr_cache="lru",
+                           nbr_capacity=512)
+        targets = zipf_traffic(graph, 640, a=1.1, seed=0)
+        eng.infer(targets[:256], overlap=False)   # warm to steady state
+        s = eng.scheduler.stats
+        h0, m0 = s.cache_hits, s.cache_misses
+        eng.infer(targets[256:], overlap=False)
+        hits, misses = s.cache_hits - h0, s.cache_misses - m0
+        assert hits / (hits + misses) >= 0.80
+        eng.close()
+
+
+class TestPartialResidencyStore:
+    def test_budget_zero_keeps_all_host_side(self, graph):
+        st = DeviceFeatureStore(graph, f_pad=graph.feature_dim,
+                                budget_bytes=0)
+        assert st.num_resident == 0
+        payload, _ = st.host_payload([np.array([0, 1])], 4)
+        assert payload["miss_feats"].shape[0] == 2
+        np.testing.assert_array_equal(payload["miss_feats"][0],
+                                      graph.features[0])
+
+    def test_hot_rows_selected_by_score(self, graph):
+        score = np.zeros(graph.num_vertices)
+        score[[3, 7]] = 1.0
+        st = DeviceFeatureStore(graph, f_pad=graph.feature_dim,
+                                budget_bytes=3 * graph.feature_dim * 4,
+                                hot_scores=score)
+        assert st.num_resident == 2
+        assert st.slot_of[3] > 0 and st.slot_of[7] > 0
+
+
+class TestServerReport:
+    def test_report_surfaces_store_stats(self, graph, cfg):
+        from repro.serve.gnn_server import GNNServer
+        eng = DecoupledEngine(graph, cfg, batch_size=4,
+                              store=StorePolicy(features="resident",
+                                                nbr_cache="lru"))
+        srv = GNNServer(eng, max_wait_s=0.005)
+        srv.start()
+        reqs = [srv.submit(int(t)) for t in [0, 1, 2, 3, 0, 1, 2, 3]]
+        srv.drain(reqs, timeout=120)
+        srv.stop()
+        m = srv.report()["models"]["default"]
+        for key in ("bytes_shipped", "transfer_ratio", "cache_hit_rate",
+                    "dedup_ratio", "store"):
+            assert key in m
+        assert m["bytes_shipped"] > 0
+        assert m["transfer_ratio"] < 0.5          # resident: index-only
+        assert m["store"]["features"]["strategy"] == "resident"
+        assert m["store"]["nbr_cache"]["capacity"] == 4096
+        eng.close()
