@@ -23,9 +23,10 @@ def modeled_tpu_latency(cfg: GNNConfig, batch: int) -> float:
     per_target = sum(
         max(c["t_compute"], c["t_memory"]) for c in
         [layer_costs(cfg, cfg.receptive_field, cfg.f_in, cfg.f_hidden,
-                     spec)]
+                     spec, section="layer0")]
         + [layer_costs(cfg, cfg.receptive_field, cfg.f_hidden,
-                       cfg.f_hidden, spec)] * (cfg.n_layers - 1))
+                       cfg.f_hidden, spec, section="inner")]
+        * (cfg.n_layers - 1))
     return per_target * batch   # one chip, C sequential grid cells
 
 

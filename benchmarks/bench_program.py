@@ -1,0 +1,162 @@
+"""AckProgram per-op mode dispatch benchmark.
+
+For every model kind, the same engine/traffic is run three ways:
+
+  dense   every mux'd op forced to the systolic datapath
+  sg      every mux'd op forced to the scatter-gather datapath
+  auto    per-op dispatch — each Aggregate / AttentionSoftmax picks its
+          own mode from ITS kernel's FLOP model (Transform stays systolic)
+
+Two regimes are driven: the paper's hub-dense PPR subgraphs (auto should
+track the dense forcing) and an ultra-sparse graph (auto should flip the
+aggregation ops to sg while the wide transforms stay dense — the
+heterogeneous program the IR exists for; its per-op decision list is
+printed). Emits ``results/BENCH_program.json`` — a trajectory artifact
+appended per run.
+
+    python benchmarks/bench_program.py [--smoke] [--requests N]
+"""
+from __future__ import annotations
+
+import argparse
+import os
+import sys
+import time
+
+sys.path.insert(0, os.path.dirname(os.path.dirname(os.path.abspath(__file__))))
+
+import numpy as np
+
+from benchmarks.common import (append_trajectory, print_table,
+                               save_result, trajectory_path)
+from repro.core.engine import DecoupledEngine
+from repro.gnn.model import GNNConfig
+from repro.graphs.csr import from_edge_list
+from repro.graphs.synthetic import get_graph
+
+TRAJECTORY_PATH = trajectory_path("program")
+
+KINDS = ("gcn", "sage", "gin", "gat")
+
+
+def sparse_graph(v=2048, edges=256, f=64, seed=0):
+    """Mean degree << 1: the regime where sg aggregation wins (N > 2E)."""
+    rng = np.random.default_rng(seed)
+    src = rng.choice(v, edges, replace=False)
+    dst = (src + 1 + rng.integers(0, v - 1, edges)) % v
+    feats = rng.standard_normal((v, f)).astype(np.float32)
+    return from_edge_list(src, dst, v, feats, name="ultra-sparse")
+
+
+def run_mode(g, cfg, params, mode, targets, batch_size):
+    import jax
+    with DecoupledEngine(g, cfg, params=params, batch_size=batch_size,
+                         mode=mode) as eng:
+        # warm the compile out of the measurement
+        w = eng.submit_chunk(targets[:batch_size]).result()
+        jax.block_until_ready(w)
+        lats = []
+        for i in range(0, len(targets), batch_size):
+            t0 = time.perf_counter()
+            eng.submit_chunk(targets[i:i + batch_size]).result()
+            lats.append(time.perf_counter() - t0)
+        lat = np.array(lats)
+        dec = eng.decision
+        return {"mode": mode,
+                "resolved": dec.mode,
+                "p50_ms": round(float(np.percentile(lat, 50)) * 1e3, 3),
+                "p99_ms": round(float(np.percentile(lat, 99)) * 1e3, 3),
+                "ops": [{"site": d.site, "op": d.op, "mode": d.mode}
+                        for d in dec],
+                "n_dense": dec.n_dense, "n_sg": dec.n_sg}
+
+
+def bench_regime(name, g, kinds, requests, batch_size, receptive_field,
+                 f_hidden, seed=0):
+    import jax
+
+    from repro.gnn.model import init_gnn
+    print(f"\n-- regime: {name} (V={g.num_vertices}, "
+          f"E={g.num_edges}, N={receptive_field}) --")
+    rng = np.random.default_rng(seed)
+    pool = np.unique(np.concatenate(
+        [np.where(g.degrees > 0)[0], np.arange(min(64, g.num_vertices))]))
+    targets = rng.choice(pool, size=requests)
+    rows, details = [], {}
+    for kind in kinds:
+        cfg = GNNConfig(kind=kind, n_layers=2,
+                        receptive_field=receptive_field,
+                        f_in=g.feature_dim, f_hidden=f_hidden)
+        params = init_gnn(cfg, jax.random.PRNGKey(seed))
+        row = {"kind": kind}
+        for mode in ("dense", "sg", "auto"):
+            r = run_mode(g, cfg, params, mode, targets, batch_size)
+            row[f"{mode}_p50_ms"] = r["p50_ms"]
+            if mode == "auto":
+                row["auto_program"] = f"{r['n_dense']}d+{r['n_sg']}sg"
+                details[kind] = r["ops"]
+        rows.append(row)
+        print(f"  [{kind}] dense={row['dense_p50_ms']}ms "
+              f"sg={row['sg_p50_ms']}ms auto={row['auto_p50_ms']}ms "
+              f"auto-program={row['auto_program']}", flush=True)
+    print()
+    print_table(rows, ["kind", "dense_p50_ms", "sg_p50_ms", "auto_p50_ms",
+                       "auto_program"])
+    return rows, details
+
+
+def run(requests: int = 256, batch_size: int = 8, scale: float = 0.02,
+        receptive_field: int = 64, seed: int = 0,
+        kinds=KINDS):
+    g_dense = get_graph("flickr", scale=scale, seed=seed)
+    dense_rows, dense_ops = bench_regime(
+        "ppr-dense (paper regime)", g_dense, kinds, requests, batch_size,
+        receptive_field, f_hidden=256, seed=seed)
+
+    g_sparse = sparse_graph(seed=seed)
+    sparse_rows, sparse_ops = bench_regime(
+        "ultra-sparse (mixed per-op regime)", g_sparse, kinds, requests,
+        batch_size, receptive_field=32, f_hidden=256, seed=seed)
+
+    mixed = {k: ops for k, ops in sparse_ops.items()
+             if {o["mode"] for o in ops} == {"dense", "sg"}}
+    print("\nper-op decisions (ultra-sparse, auto):")
+    for kind, ops_list in sparse_ops.items():
+        print(f"  {kind}: " + ", ".join(
+            f"{o['site']} {o['op']}={o['mode']}" for o in ops_list))
+    if mixed:
+        print(f"\nheterogeneous auto programs (sg aggregation + dense "
+              f"transform in ONE compiled program): {sorted(mixed)}")
+
+    payload = {"requests": requests, "batch_size": batch_size,
+               "receptive_field": receptive_field,
+               "dense_regime": dense_rows, "sparse_regime": sparse_rows,
+               "sparse_auto_ops": sparse_ops,
+               "mixed_program_kinds": sorted(mixed)}
+    save_result("program", payload)
+    path = append_trajectory(
+        dict(payload, timestamp=time.strftime("%Y-%m-%dT%H:%M:%S")),
+        TRAJECTORY_PATH)
+    print(f"\ntrajectory appended to {path}")
+    return payload
+
+
+def run_suite(quick: bool = True):
+    """benchmarks.run harness entry (quick == CI smoke shape)."""
+    if quick:
+        return run(requests=64, batch_size=8, scale=0.005,
+                   receptive_field=32)
+    return run()
+
+
+if __name__ == "__main__":
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--requests", type=int, default=256)
+    ap.add_argument("--batch-size", type=int, default=8)
+    ap.add_argument("--smoke", action="store_true",
+                    help="tiny graph + few requests (CI canary)")
+    a = ap.parse_args()
+    if a.smoke:
+        run_suite(quick=True)
+    else:
+        run(requests=a.requests, batch_size=a.batch_size)

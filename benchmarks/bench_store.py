@@ -24,7 +24,6 @@ appended per run (p50/p99, bytes shipped, hit rates per policy).
 from __future__ import annotations
 
 import argparse
-import json
 import os
 import sys
 import time
@@ -33,17 +32,14 @@ sys.path.insert(0, os.path.dirname(os.path.dirname(os.path.abspath(__file__))))
 
 import numpy as np
 
-from benchmarks.common import RESULTS_DIR, print_table, save_result
+from benchmarks.common import (append_trajectory, print_table,
+                               save_result, trajectory_path)
 from repro.core.engine import DecoupledEngine
 from repro.gnn.model import GNNConfig
 from repro.graphs.synthetic import get_graph, zipf_traffic
 from repro.store import StorePolicy
 
-# trajectory sits beside the per-run payload dir, governed by the SAME
-# knob (REPRO_BENCH_DIR via common.RESULTS_DIR): default results/bench/
-# -> results/BENCH_store.json
-TRAJECTORY_PATH = os.path.join(
-    os.path.dirname(RESULTS_DIR.rstrip("/")) or ".", "BENCH_store.json")
+TRAJECTORY_PATH = trajectory_path("store")
 
 
 def make_policies(nbr_capacity: int) -> dict:
@@ -97,23 +93,6 @@ def run_policy(name: str, policy: StorePolicy, g, cfg, params,
                 "store": eng.store_report()}
 
 
-def append_trajectory(record: dict, path: str = TRAJECTORY_PATH):
-    os.makedirs(os.path.dirname(path) or ".", exist_ok=True)
-    runs = []
-    if os.path.exists(path):
-        try:
-            with open(path) as f:
-                runs = json.load(f)
-            if not isinstance(runs, list):
-                runs = [runs]
-        except (json.JSONDecodeError, OSError):
-            runs = []
-    runs.append(record)
-    with open(path, "w") as f:
-        json.dump(runs, f, indent=1, default=float)
-    return path
-
-
 def run(requests: int = 4096, batch_size: int = 16, scale: float = 0.05,
         receptive_field: int = 64, zipf_a: float = 1.1,
         nbr_capacity: int = 1024, warm_fraction: float = 0.25,
@@ -159,7 +138,8 @@ def run(requests: int = 4096, batch_size: int = 16, scale: float = 0.05,
                "feature_dim": g.feature_dim}
     save_result("store", payload)
     path = append_trajectory(
-        dict(payload, timestamp=time.strftime("%Y-%m-%dT%H:%M:%S")))
+        dict(payload, timestamp=time.strftime("%Y-%m-%dT%H:%M:%S")),
+        TRAJECTORY_PATH)
     print(f"\ntrajectory appended to {path}")
     return payload
 

@@ -37,6 +37,33 @@ def save_result(name: str, payload: dict):
     return path
 
 
+def trajectory_path(name: str) -> str:
+    """Per-suite trajectory artifact beside the per-run payload dir,
+    governed by the SAME knob (REPRO_BENCH_DIR via RESULTS_DIR):
+    default results/bench/ -> results/BENCH_<name>.json."""
+    return os.path.join(os.path.dirname(RESULTS_DIR.rstrip("/")) or ".",
+                        f"BENCH_{name}.json")
+
+
+def append_trajectory(record: dict, path: str):
+    """Append one run record to a JSON-list trajectory file (created on
+    first use; unreadable/corrupt files restart the list)."""
+    os.makedirs(os.path.dirname(path) or ".", exist_ok=True)
+    runs = []
+    if os.path.exists(path):
+        try:
+            with open(path) as f:
+                runs = json.load(f)
+            if not isinstance(runs, list):
+                runs = [runs]
+        except (json.JSONDecodeError, OSError):
+            runs = []
+    runs.append(record)
+    with open(path, "w") as f:
+        json.dump(runs, f, indent=1, default=float)
+    return path
+
+
 def print_table(rows, cols):
     widths = [max(len(str(r.get(c, ""))) for r in rows + [{c: c}])
               for c in cols]

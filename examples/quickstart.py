@@ -26,7 +26,7 @@ cfg = GNNConfig(kind="sage", n_layers=5, receptive_field=128,
 # 3. engine: host INI + subgraph build, device = one jitted ACK program
 engine = DecoupledEngine(g, cfg, batch_size=64)
 print(f"model {cfg.display}; ACK mode = {engine.mode} "
-      f"({engine.decision.reason})")
+      f"({engine.decision.summary}; {engine.decision.reason})")
 
 # 4. mini-batch inference for 128 target vertices
 targets = np.random.default_rng(0).integers(0, g.num_vertices, size=128)

@@ -40,5 +40,7 @@ def choose_mode(n: int, avg_edges: float, f: int,
     if force in ("dense", "sg"):
         return AckDecision(force, dense, sg, "forced")
     mode = "dense" if dense <= sg else "sg"
+    # break-even: dense <= sg  <=>  2*N^2*f <= 4*E*N*f  <=>  N <= 2E —
+    # report the quantities actually compared
     return AckDecision(mode, dense, sg,
-                       f"N^2={n*n:.0f} vs 2E={2*avg_edges:.0f}")
+                       f"N={n} vs 2E={2*avg_edges:.0f}")

@@ -23,18 +23,16 @@ from __future__ import annotations
 from dataclasses import dataclass, field
 from typing import Dict, List, Sequence
 
+from repro.core.program import lower, program_alu_ops
 from repro.gnn.model import GNNConfig
 
 MXU_LANE = 128
 
-# ops required per model kind -> all supported by MXU (matmul) + VPU
-# (elementwise max/exp/add/mul) — the "N_ALU" feasibility check.
-KIND_OPS = {
-    "gcn": {"matmul", "add", "relu"},
-    "sage": {"matmul", "add", "relu"},
-    "gin": {"matmul", "add", "relu", "mul"},
-    "gat": {"matmul", "add", "exp", "max", "mul", "leaky_relu"},
-}
+# scalar primitives the TPU's MXU (matmul) + VPU (elementwise) cover —
+# the "N_ALU" feasibility vocabulary. The per-model REQUIRED set is no
+# longer a hand-kept table: it is derived from the model's lowered
+# AckProgram (core.program.program_alu_ops), so a kind registered at
+# runtime is admissible with no DSE edit.
 TPU_OPS = {"matmul", "add", "relu", "mul", "exp", "max", "leaky_relu",
            "min", "sub", "div"}
 
@@ -75,11 +73,13 @@ def plan_covers(plan: DSEPlan, cfg: GNNConfig,
     buffered VMEM working set at its own receptive field / feature dims.
     """
     reasons: List[str] = []
-    ops = KIND_OPS.get(cfg.kind)
-    if ops is None:
-        reasons.append(f"unknown model kind {cfg.kind!r}")
-    elif not ops <= TPU_OPS:
-        reasons.append(f"ops {sorted(ops - TPU_OPS)} unsupported")
+    try:
+        ops = program_alu_ops(cfg)
+    except KeyError as e:                 # no registered lowering: the
+        reasons.append(str(e).strip('"'))  # message names the fix
+    else:
+        if not ops <= TPU_OPS:
+            reasons.append(f"ops {sorted(ops - TPU_OPS)} unsupported")
     f = max(cfg.f_in, cfg.f_hidden)
     f_pad = f + (-f) % MXU_LANE
     vm = _vmem_layer(cfg.receptive_field, f_pad, plan.block_f,
@@ -113,13 +113,26 @@ def _vmem_layer(n: int, f_in: int, bf: int, depth: int = 2) -> int:
 
 
 def layer_costs(cfg: GNNConfig, n: int, f_in: int, f_out: int,
-                spec: TPUSpec) -> dict:
-    """Per-layer dense-mode compute/memory model for one subgraph."""
-    flops = 2.0 * n * n * f_out + 2.0 * n * f_in * f_out
-    if cfg.kind == "sage":
-        flops += 2.0 * n * f_in * f_out
-    if cfg.kind == "gat":
-        flops += 2.0 * n * n * cfg.n_heads + 6.0 * n * n * cfg.n_heads
+                spec: TPUSpec, *, section: str = "auto") -> dict:
+    """Per-layer dense-mode compute/memory model for one subgraph, summed
+    over the ops of the model's lowered layer template (per-op FLOP
+    models live with the ops in core.program). The feature width is
+    tracked through the op stream the same way specialize() does: each
+    Transform re-widens to f_out, so later ops (a second GIN MLP, gat's
+    attention) are costed at the width they actually see. ``section``
+    picks the template explicitly ("layer0" | "inner"); "auto" infers it
+    from the widths (layer0 iff f_in != f_out)."""
+    from repro.core.program import Transform
+    prog = lower(cfg)
+    if section == "auto":
+        section = "layer0" if f_in != f_out or cfg.n_layers == 1 \
+            else "inner"
+    ops_seq = prog.layer0 if section == "layer0" else prog.inner
+    flops, f_cur = 0.0, f_in
+    for op in ops_seq:
+        flops += op.dense_flops(n, f_cur, f_out)
+        if isinstance(op, Transform):
+            f_cur = f_out
     # HBM traffic: H in/out + A once; weights amortized over C subgraphs
     bytes_hbm = 4.0 * (n * f_in + n * f_out + n * n)
     return {"flops": flops, "bytes": bytes_hbm,
@@ -129,8 +142,8 @@ def layer_costs(cfg: GNNConfig, n: int, f_in: int, f_out: int,
 
 def explore(models: Sequence[GNNConfig], spec: TPUSpec = TPUSpec(),
             buffer_depth: int = 2) -> DSEPlan:
-    # Step 1 — op coverage
-    ops_ok = all(KIND_OPS[m.kind] <= TPU_OPS for m in models)
+    # Step 1 — op coverage, from each model's lowered instruction stream
+    ops_ok = all(program_alu_ops(m) <= TPU_OPS for m in models)
     n_max = max(m.receptive_field for m in models)
     f_max = max(max(m.f_in, m.f_hidden) for m in models)
     f_pad = f_max + (-f_max) % MXU_LANE
@@ -147,9 +160,10 @@ def explore(models: Sequence[GNNConfig], spec: TPUSpec = TPUSpec(),
     c_core = 8
     for m in models:
         n = m.receptive_field
-        costs = [layer_costs(m, n, m.f_in, m.f_hidden, spec)] + \
-            [layer_costs(m, n, m.f_hidden, m.f_hidden, spec)] * \
-            (m.n_layers - 1)
+        costs = [layer_costs(m, n, m.f_in, m.f_hidden, spec,
+                             section="layer0")] + \
+            [layer_costs(m, n, m.f_hidden, m.f_hidden, spec,
+                         section="inner")] * (m.n_layers - 1)
         t_comp = sum(c["t_compute"] for c in costs)
         t_mem = sum(c["t_memory"] for c in costs)
         w_bytes = 4.0 * (m.f_in * m.f_hidden

@@ -1,10 +1,11 @@
 """Decoupled mini-batch GNN inference engine (paper Algorithm 2 + 3).
 
 Host side: INI (PPR local push) + induced-subgraph construction into
-fixed-shape padded batches. Device side: one jitted program per
-(model, N, C) executing L layers through the ACK (dense or scatter-gather
-mode; XLA or Pallas implementation) and the Readout. The fixed shapes are
-the decoupling dividend: ONE compiled program serves every batch — the
+fixed-shape padded batches. Device side: one jitted AckProgram per
+(model, N, C) — the model's registered lowering (core.program) executed
+through the ACK kernels with a PER-OP dense/scatter-gather mux (XLA or
+Pallas implementation) and the Readout. The fixed shapes are the
+decoupling dividend: ONE compiled program serves every batch — the
 paper's "single accelerator, no reconfiguration" property.
 
 ``DecoupledEngine.infer`` overlaps host preparation of batch i+1 with
@@ -16,6 +17,7 @@ so serving never pays per-call pipeline construction.
 from __future__ import annotations
 
 import functools
+import warnings
 from dataclasses import dataclass
 from typing import Dict, Optional
 
@@ -23,14 +25,14 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core.ack import AckDecision, choose_mode
+from repro.core.program import (ProgramDecision, execute,
+                                input_width_params, lower,
+                                required_adjacency, specialize)
 from repro.core.scheduler import (PipelineScheduler, SchedulerStats,
                                   StreamTicket)
 from repro.core.subgraph import SubgraphBatch, default_edge_pad
-from repro.gnn.layers import readout
-from repro.gnn.model import GNNConfig, gnn_forward, init_gnn
+from repro.gnn.model import GNNConfig, init_gnn
 from repro.graphs.csr import CSRGraph
-from repro.kernels import ops
 from repro.store import NeighborhoodCache, StorePolicy, build_feature_source
 from repro.store.feature_store import pad_feature_dim
 from repro.store.nbr_cache import nbr_key
@@ -40,49 +42,11 @@ def _pad128(f: int) -> int:
     return f + (-f) % 128
 
 
-def _pallas_layer(cfg: GNNConfig, kind_first: bool):
-    """Build an inner-layer apply using the Pallas ACK kernels."""
-
-    def apply(p, h, batch):
-        adj, adj_mean, mask = batch["adj"], batch["adj_mean"], batch["mask"]
-        if cfg.kind == "gcn":
-            return ops.fused_gnn_layer(adj, h, p["w"], None, p["b"], mask,
-                                       act="relu")
-        if cfg.kind == "sage":
-            return ops.fused_gnn_layer(adj_mean, h, p["w_neigh"],
-                                       p["w_self"], p["b"], mask,
-                                       act="relu")
-        if cfg.kind == "gin":
-            n = h.shape[1]
-            a_gin = jnp.sign(adj_mean) + \
-                (1.0 + p["eps"]) * jnp.eye(n, dtype=h.dtype)
-            hid = ops.fused_gnn_layer(a_gin, h, p["w1"], None, p["b1"],
-                                      mask, act="relu")
-            return ops.fused_gnn_layer(adj, hid, None, p["w2"], p["b2"],
-                                       mask, act="relu")
-        if cfg.kind == "gat":
-            nh = cfg.n_heads
-            z = ops.fused_gnn_layer(adj, h, None, p["w"], None, mask,
-                                    act="none")
-            s_src = jnp.einsum("cnhf,hf->cnh",
-                               z.reshape(*z.shape[:2], nh, -1), p["a_src"])
-            s_dst = jnp.einsum("cnhf,hf->cnh",
-                               z.reshape(*z.shape[:2], nh, -1), p["a_dst"])
-            n = h.shape[1]
-            struct = (jnp.sign(adj_mean) + jnp.eye(n, dtype=h.dtype)) \
-                * mask[:, None, :]
-            out = ops.gat_attention(z, s_src, s_dst, struct, n_heads=nh)
-            return jax.nn.elu(out + p["b"]) * mask[..., None]
-        raise ValueError(cfg.kind)
-
-    return apply
-
-
 @dataclass
 class InferenceResult:
     embeddings: np.ndarray           # [num_targets, f]
     stats: Optional[SchedulerStats]
-    decision: AckDecision
+    decision: ProgramDecision        # per-op mode decisions + summary
 
 
 class DecoupledEngine:
@@ -91,12 +55,20 @@ class DecoupledEngine:
     def __init__(self, graph: CSRGraph, cfg: GNNConfig, params=None, *,
                  batch_size: int = 64, mode: str = "auto",
                  impl: str = "xla", num_threads: int = 8, seed: int = 0,
-                 e_pad: Optional[int] = None, dedup_features: bool = False,
+                 e_pad: Optional[int] = None,
+                 dedup_features: Optional[bool] = None,
                  store: Optional[StorePolicy] = None):
         self.graph, self.cfg = graph, cfg
         self.batch_size = batch_size
         self.num_threads = num_threads
         self.impl = impl
+        if dedup_features is not None:
+            warnings.warn(
+                "dedup_features= is deprecated; pass "
+                "store=StorePolicy(features='packed') instead",
+                DeprecationWarning, stacklevel=2)
+        else:
+            dedup_features = False
         if store is None:
             # back-compat: dedup_features=True was the pre-store spelling
             # of the packed shipping strategy
@@ -112,21 +84,32 @@ class DecoupledEngine:
         n = cfg.receptive_field
         self.e_pad = e_pad or default_edge_pad(graph, n)
         avg_edges = min(self.e_pad, n * float(graph.degrees.mean()))
-        self.decision = choose_mode(n, avg_edges, cfg.f_hidden,
-                                    None if mode == "auto" else mode)
+        # compile the model through the lowering registry, then set each
+        # op's mode mux from ITS kernel's FLOP model (mode="auto") or the
+        # caller's force — a single program may mix sg aggregation with
+        # dense (systolic) transforms
+        self.program, self.decision = specialize(
+            lower(cfg), n=n, avg_edges=avg_edges, f_in=cfg.f_in,
+            f_hidden=cfg.f_hidden,
+            force=None if mode == "auto" else mode)
         self.mode = self.decision.mode
+        self.needs_edges = any(d.mode == "sg" for d in self.decision)
+        # ship only the adjacency arrays the specialized program reads
+        # (an all-sg aggregation path ships none — just the edge list)
+        self.adj_keys = required_adjacency(self.program)
         if params is None:
             params = init_gnn(cfg, jax.random.PRNGKey(seed))
         self.params = params
         self.f_pad = _pad128(cfg.f_in) if impl == "pallas" else cfg.f_in
         if self.f_pad != cfg.f_in:
             # MXU alignment: zero-pad layer0 input-rows to match the padded
-            # feature columns (padded features are zero, so this is exact)
+            # feature columns (padded features are zero, so this is exact).
+            # WHICH weights are f_in-sized is read off the lowered program
+            # (registry contract: custom kinds need no engine edits)
             pad = self.f_pad - cfg.f_in
             l0 = dict(params["layer0"])
-            for k in ("w", "w_self", "w_neigh", "w1"):
-                if k in l0:
-                    l0[k] = jnp.pad(l0[k], ((0, pad), (0, 0)))
+            for k in input_width_params(self.program):
+                l0[k] = jnp.pad(l0[k], ((0, pad), (0, 0)))
             self.params = dict(params, layer0=l0)
         self._infer = jax.jit(functools.partial(self._forward))
         self._fsource = build_feature_source(graph, store, self.f_pad)
@@ -135,6 +118,10 @@ class DecoupledEngine:
         # per-batch reconfiguration); lazily started on first use
         self.scheduler = PipelineScheduler(self.prepare, self.run_device,
                                            depth=3)
+        # graph-update streaming: CSRGraph.apply_edge_updates notifies us
+        # so cached neighborhoods / resident rows never serve stale state
+        if hasattr(graph, "register_listener"):
+            graph.register_listener(self.invalidate)
 
     def _build_nbr_cache(self, policy: StorePolicy
                          ) -> Optional[NeighborhoodCache]:
@@ -154,19 +141,7 @@ class DecoupledEngine:
 
     # -- device program ----------------------------------------------------
     def _forward(self, params, batch: Dict[str, jax.Array]):
-        cfg = self.cfg
-        if self.impl == "pallas" and self.mode == "dense":
-            apply = _pallas_layer(cfg, kind_first=True)
-            h = apply(params["layer0"], batch["feats"], batch)
-            if cfg.n_layers > 1:
-                def body(hh, lp):
-                    return apply(lp, hh, batch), None
-                h, _ = jax.lax.scan(body, h, params["layers"])
-            emb = readout(h, batch["mask"], cfg.readout)
-            if cfg.num_classes:
-                emb = emb @ params["cls_w"] + params["cls_b"]
-            return emb
-        emb, _ = gnn_forward(cfg, params, batch, mode=self.mode)
+        emb, _ = execute(self.program, params, batch, impl=self.impl)
         return emb
 
     # -- host side ----------------------------------------------------------
@@ -233,10 +208,12 @@ class DecoupledEngine:
 
     def device_batch(self, sb: SubgraphBatch,
                      include_feats: bool = True) -> Dict[str, np.ndarray]:
-        d = dict(adj=sb.adj, adj_mean=sb.adj_mean, mask=sb.mask)
+        d = {"mask": sb.mask}
+        for k in self.adj_keys:     # only what the compiled program reads
+            d[k] = sb.adj if k == "adj" else sb.adj_mean
         if include_feats:
             d["feats"] = self._pad_feature_dim(sb.feats)
-        if self.mode == "sg":
+        if self.needs_edges:
             n = sb.n
             self_w = sb.adj[:, np.arange(n), np.arange(n)]
             indeg = np.einsum("cij->ci", (sb.adj_mean > 0).astype(np.float32))
@@ -319,6 +296,8 @@ class DecoupledEngine:
         return r
 
     def close(self):
+        if hasattr(self.graph, "unregister_listener"):
+            self.graph.unregister_listener(self.invalidate)
         self.scheduler.close()
 
     def __enter__(self) -> "DecoupledEngine":

@@ -1,0 +1,87 @@
+"""Builtin model lowerings: GNN kind -> ACK instruction stream.
+
+Each lowering maps one GNN variant onto the typed op vocabulary in
+``core.program`` (the paper's kernel taxonomy). The registry entry also
+carries the per-layer parameter initializer, so a kind registered here —
+or at runtime by a user — is immediately constructible (``init_gnn``),
+servable (``DecoupledEngine``/``GNNServer``) and admissible (DSE plan
+checks), with no engine/model/dse edits.
+
+The lowering table (layer template; layer0 and inner layers share it,
+differing only in feature widths):
+
+  gcn   Aggregate[gcn]    -> Transform[w]            (relu)
+  sage  Aggregate[mean]   -> Transform[w_neigh + w_self]  (relu)
+  gin   Aggregate[binary] -> Residual[(1+eps) h]
+                          -> Transform[w1] -> Transform[w2]   (relu, relu)
+  gat   Transform[w] (none) -> AttentionScore -> AttentionSoftmax (elu)
+
+Tail: Readout[cfg.readout] and, when ``cfg.num_classes`` is set, Classify.
+"""
+from __future__ import annotations
+
+from typing import Tuple
+
+from repro.core.program import (AckOp, AckProgram, Aggregate,
+                                AttentionScore, AttentionSoftmax, Classify,
+                                Readout, Residual, Transform,
+                                register_lowering)
+from repro.gnn.layers import (init_gat_layer, init_gcn_layer,
+                              init_gin_layer, init_sage_layer)
+
+
+def _tail(cfg) -> Tuple[AckOp, ...]:
+    tail: Tuple[AckOp, ...] = (Readout(kind=cfg.readout),)
+    if cfg.num_classes:
+        tail += (Classify(),)
+    return tail
+
+
+def _program(cfg, layer_ops: Tuple[AckOp, ...]) -> AckProgram:
+    return AckProgram(kind=cfg.kind, layer0=layer_ops, inner=layer_ops,
+                      tail=_tail(cfg), n_layers=cfg.n_layers)
+
+
+@register_lowering("gcn",
+                   layer_init=lambda cfg, key, fi, fo:
+                   init_gcn_layer(key, fi, fo))
+def lower_gcn(cfg) -> AckProgram:
+    return _program(cfg, (
+        Aggregate(norm="gcn"),
+        Transform(w="w", b="b", act="relu"),
+    ))
+
+
+@register_lowering("sage",
+                   layer_init=lambda cfg, key, fi, fo:
+                   init_sage_layer(key, fi, fo))
+def lower_sage(cfg) -> AckProgram:
+    return _program(cfg, (
+        Aggregate(norm="mean"),
+        Transform(w="w_neigh", w_self="w_self", b="b", act="relu"),
+    ))
+
+
+@register_lowering("gin",
+                   layer_init=lambda cfg, key, fi, fo:
+                   init_gin_layer(key, fi, fo))
+def lower_gin(cfg) -> AckProgram:
+    return _program(cfg, (
+        Aggregate(norm="binary"),
+        Residual(src="h_in", into="z", eps_param="eps"),
+        Transform(w="w1", b="b1", act="relu", src="z", out="h2",
+                  masked=False),
+        Transform(w="w2", b="b2", act="relu", src="h2", out="h"),
+    ))
+
+
+@register_lowering("gat",
+                   layer_init=lambda cfg, key, fi, fo:
+                   init_gat_layer(key, fi, fo, cfg.n_heads))
+def lower_gat(cfg) -> AckProgram:
+    return _program(cfg, (
+        Transform(w="w", b=None, act="none", src="h", out="z",
+                  masked=False),
+        AttentionScore(n_heads=cfg.n_heads),
+        AttentionSoftmax(b="b", act="elu", n_heads=cfg.n_heads),
+    ))

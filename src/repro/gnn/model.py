@@ -14,8 +14,7 @@ from dataclasses import dataclass
 import jax
 import jax.numpy as jnp
 
-from repro.gnn.layers import (LAYER_APPLY, LAYER_INITS, gat_layer,
-                              init_gat_layer, readout)
+from repro.core.program import layer_init_for, lower_and_specialize
 from repro.models.common import dense_init, split_keys
 
 
@@ -39,9 +38,9 @@ class GNNConfig:
 
 
 def _init_layer(cfg: GNNConfig, key, f_in, f_out):
-    if cfg.kind == "gat":
-        return init_gat_layer(key, f_in, f_out, cfg.n_heads)
-    return LAYER_INITS[cfg.kind](key, f_in, f_out)
+    # per-layer params come from the same registry as the lowering, so a
+    # runtime-registered kind is constructible with no edits here
+    return layer_init_for(cfg.kind)(cfg, key, f_in, f_out)
 
 
 def init_gnn(cfg: GNNConfig, key):
@@ -57,47 +56,18 @@ def init_gnn(cfg: GNNConfig, key):
     return p
 
 
-def _apply_layer(cfg: GNNConfig, p, h, batch, mode):
-    if cfg.kind == "gat":
-        return gat_layer(p, h, batch, mode)
-    return LAYER_APPLY[cfg.kind](p, h, batch, mode)
-
-
 def gnn_forward(cfg: GNNConfig, params, batch, mode: str = "dense",
-                layer_fn=None):
+                impl: str = "xla"):
     """batch: device dict (see SubgraphBatch.device_arrays + derived keys).
     Returns (embeddings [C, f_hidden or num_classes], final h [C,N,f]).
 
-    ``layer_fn`` optionally overrides the inner-layer apply (the engine
-    injects the Pallas ACK kernels here; default is the pure-jnp path)."""
-    apply = layer_fn or (lambda p, h: _apply_layer(cfg, p, h, batch, mode))
-    h = apply(params["layer0"], batch["feats"])
-    if cfg.n_layers > 1:
-        def body(hh, lp):
-            return apply(lp, hh), None
-        h, _ = jax.lax.scan(body, h, params["layers"])
-    emb = readout(h, batch["mask"], cfg.readout)
-    if cfg.num_classes:
-        emb = emb @ params["cls_w"] + params["cls_b"]
-    return emb, h
-
-
-def sg_extras(batch_np, adj, edge_src, edge_dst):
-    """Derived arrays the sg mode needs beyond SubgraphBatch.device_arrays:
-    per-vertex self-loop weights and row-mean edge weights."""
-    import numpy as np
-    C, N, _ = adj.shape
-    self_w = adj[:, np.arange(N), np.arange(N)]
-    # mean-normalized edge weights for SAGE: 1/indeg(dst)
-    indeg = np.zeros((C, N), np.float32)
-    valid = batch_np.edge_w != 0
-    for c in range(C):
-        np.add.at(indeg[c], edge_dst[c][valid[c]], 1.0)
-    ew_mean = np.where(valid,
-                       1.0 / np.maximum(indeg[np.arange(C)[:, None],
-                                              edge_dst], 1.0),
-                       0.0).astype(np.float32)
-    return self_w.astype(np.float32), ew_mean
+    Thin wrapper over the AckProgram pipeline: lowers ``cfg`` through the
+    model registry, forces every mux'd op to ``mode``, and executes. For
+    per-op (auto/mixed) mode dispatch use ``core.program`` directly — the
+    engine does."""
+    from repro.core.program import execute
+    prog, _ = lower_and_specialize(cfg, force=mode)
+    return execute(prog, params, batch, impl=impl)
 
 
 # the paper's evaluated sweep (§5.2): 3 models x L in {3,5,8,16} x

@@ -6,8 +6,8 @@ construction. Features live alongside as a dense [V, f] float32 matrix.
 """
 from __future__ import annotations
 
-from dataclasses import dataclass
-from typing import Optional
+from dataclasses import dataclass, field
+from typing import Callable, List, Optional
 
 import numpy as np
 
@@ -19,6 +19,11 @@ class CSRGraph:
     features: np.ndarray          # [V, f] float32
     labels: Optional[np.ndarray] = None   # [V] int32
     name: str = "graph"
+    # update listeners: called with the affected vertex ids after every
+    # apply_edge_updates (DecoupledEngine registers its invalidate hook
+    # here, so cached neighborhoods / resident feature rows stay coherent
+    # with the mutating graph)
+    _listeners: List[Callable] = field(default_factory=list, repr=False)
 
     @property
     def num_vertices(self) -> int:
@@ -47,6 +52,103 @@ class CSRGraph:
             assert self.indices.max() < self.num_vertices
         assert self.features.shape[0] == self.num_vertices
         return self
+
+    def __deepcopy__(self, memo):
+        """Listeners are deployment wiring (live engines holding locks),
+        not graph data — a copied graph starts with none."""
+        import copy
+        return CSRGraph(indptr=copy.deepcopy(self.indptr, memo),
+                        indices=copy.deepcopy(self.indices, memo),
+                        features=copy.deepcopy(self.features, memo),
+                        labels=copy.deepcopy(self.labels, memo),
+                        name=self.name)
+
+    # -- graph-update streaming (ROADMAP: edge insert/delete batches) -------
+    def register_listener(self, fn: Callable) -> None:
+        """``fn(affected_vertices)`` runs after every apply_edge_updates.
+        Holds a strong reference — pair with unregister_listener (the
+        engine does both in __init__/close)."""
+        if fn not in self._listeners:
+            self._listeners.append(fn)
+
+    def unregister_listener(self, fn: Callable) -> None:
+        if fn in self._listeners:
+            self._listeners.remove(fn)
+
+    def apply_edge_updates(self, insert=None, delete=None,
+                           symmetrize: bool = True) -> np.ndarray:
+        """Apply a batch of edge inserts/deletes in place and notify
+        listeners (e.g. ``DecoupledEngine.invalidate``) with the affected
+        vertex ids.
+
+        ``insert``/``delete``: an iterable of ``(u, v)`` pairs, or a
+        ``(src_array, dst_array)`` tuple of numpy arrays, in GLOBAL
+        vertex ids. With ``symmetrize`` (the
+        dataset default) each update applies in both directions; self
+        loops are dropped (layers add their own normalized self terms),
+        duplicates dedup. Vertices cannot be added — ids must be < V.
+        Rebuilds ``indptr``/``indices`` (degrees update with them) and
+        returns the sorted unique affected vertex ids.
+
+        Concurrency: the two CSR arrays swap in one C-level dict.update,
+        so a concurrent reader never sees the torn new-indptr/old-indices
+        state; a reader that loaded one array before the swap and the
+        other after can still pair mismatched snapshots. Batches already
+        in flight were prepared against the pre-update graph either way —
+        the cache generation mechanism (NeighborhoodCache.put) keeps
+        their stale results out of the caches, and the next lookup
+        recomputes on the mutated CSR."""
+        def _pairs(x):
+            if x is None:
+                return (np.zeros(0, np.int64),) * 2
+            # the array form is recognized ONLY by ndarray elements —
+            # a tuple of two (u, v) pairs must parse as two edges, not
+            # as (src, dst) columns
+            if isinstance(x, tuple) and len(x) == 2 \
+                    and isinstance(x[0], np.ndarray):
+                s, d = (np.asarray(x[0], np.int64),
+                        np.asarray(x[1], np.int64))
+            else:
+                arr = np.asarray(list(x), np.int64).reshape(-1, 2)
+                s, d = arr[:, 0], arr[:, 1]
+            if len(s) and (min(s.min(), d.min()) < 0
+                           or max(s.max(), d.max()) >= self.num_vertices):
+                raise ValueError("edge update references vertex id outside "
+                                 f"[0, {self.num_vertices})")
+            return s, d
+
+        ins_s, ins_d = _pairs(insert)
+        del_s, del_d = _pairs(delete)
+        if symmetrize:
+            ins_s, ins_d = (np.concatenate([ins_s, ins_d]),
+                            np.concatenate([ins_d, ins_s]))
+            del_s, del_d = (np.concatenate([del_s, del_d]),
+                            np.concatenate([del_d, del_s]))
+        keep = ins_s != ins_d                          # no self loops
+        ins_s, ins_d = ins_s[keep], ins_d[keep]
+
+        v = self.num_vertices
+        cur_s = np.repeat(np.arange(v, dtype=np.int64), self.degrees)
+        cur_d = self.indices.astype(np.int64)
+        cur_key = cur_s * v + cur_d
+        if len(del_s):
+            cur_key = cur_key[~np.isin(cur_key, del_s * v + del_d)]
+        if len(ins_s):
+            cur_key = np.concatenate([cur_key, ins_s * v + ins_d])
+        cur_key = np.unique(cur_key)                   # dedup + sort
+        new_s, new_d = cur_key // v, cur_key % v
+        counts = np.bincount(new_s, minlength=v)
+        indptr = np.zeros(v + 1, np.int64)
+        np.cumsum(counts, out=indptr[1:])
+        # single C-level update: no window where a reader can observe the
+        # new indptr paired with the old (shorter) indices array
+        self.__dict__.update(indptr=indptr,
+                             indices=new_d.astype(np.int32))
+        self.validate()
+        affected = np.unique(np.concatenate([ins_s, ins_d, del_s, del_d]))
+        for fn in list(self._listeners):
+            fn(affected)
+        return affected
 
 
 def from_edge_list(src: np.ndarray, dst: np.ndarray, num_vertices: int,

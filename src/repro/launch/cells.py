@@ -119,16 +119,15 @@ def gnn_batch_specs(cfg: GNNConfig, C: int, f_pad: int = 0,
     f = f_pad or cfg.f_in
     sds = jax.ShapeDtypeStruct
     if variant == "opt":
-        # beyond-paper serve slimming: ship ONLY the adjacency this model
-        # kind aggregates with, in bf16 (weights are 1/sqrt(deg) -- bf16's
-        # 8-bit mantissa is plenty), and bf16 features. Halves the
-        # HBM/PCIe bytes that dominate the GNN roofline.
+        # beyond-paper serve slimming: ship ONLY the adjacency arrays the
+        # model's lowered AckProgram reads, in bf16 (weights are
+        # 1/sqrt(deg) -- bf16's 8-bit mantissa is plenty), and bf16
+        # features. Halves the HBM/PCIe bytes that dominate the roofline.
+        from repro.core.program import lower, required_adjacency
         d = {"feats": sds((C, n, f), np.dtype("bfloat16")),
              "mask": sds((C, n), np.float32)}
-        if cfg.kind == "gcn":
-            d["adj"] = sds((C, n, n), np.dtype("bfloat16"))
-        else:
-            d["adj_mean"] = sds((C, n, n), np.dtype("bfloat16"))
+        for key in required_adjacency(lower(cfg)):
+            d[key] = sds((C, n, n), np.dtype("bfloat16"))
         return d
     return {"feats": sds((C, n, f), np.float32),
             "adj": sds((C, n, n), np.float32),

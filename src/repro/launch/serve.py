@@ -38,7 +38,7 @@ def main():
                              impl=args.impl)
     print(f"graph {g.name}: {g.num_vertices} vertices, {g.num_edges} edges")
     print(f"model {cfg.display}; ACK mode={engine.mode} "
-          f"({engine.decision.reason})")
+          f"({engine.decision.summary}; {engine.decision.reason})")
 
     server = GNNServer(engine)
     server.start()

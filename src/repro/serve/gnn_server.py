@@ -160,6 +160,11 @@ class _ModelLane:
         r["overlap"] = round(sched.overlap_fraction, 3)
         r["sched_batches"] = sched.n_batches
         r["kind"] = self.engine.cfg.kind
+        # compiled ACK program: per-op mode mux of this lane's datapath
+        r["ack"] = {"mode": self.engine.mode,
+                    "summary": self.engine.decision.summary,
+                    "ops": [{"site": d.site, "op": d.op, "mode": d.mode}
+                            for d in self.engine.decision]}
         # store subsystem: transfer + cache observability (paper t_load /
         # t_pre — what the two-level store saved this lane)
         r["bytes_shipped"] = sched.bytes_shipped

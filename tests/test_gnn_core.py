@@ -233,9 +233,10 @@ class TestFeatureDedup:
     def test_packed_equals_dense(self, graph):
         cfg = GNNConfig(kind="gcn", n_layers=2, receptive_field=64,
                         f_in=graph.feature_dim)
+        from repro.store import StorePolicy
         e1 = DecoupledEngine(graph, cfg, batch_size=8)
         e2 = DecoupledEngine(graph, cfg, params=e1.params, batch_size=8,
-                             dedup_features=True)
+                             store=StorePolicy(features="packed"))
         t = np.arange(16)
         r1 = e1.infer(t, overlap=False)
         r2 = e2.infer(t, overlap=False)

@@ -1,0 +1,106 @@
+"""Graph-update streaming (ROADMAP item): CSRGraph.apply_edge_updates
+mutates the CSR in place and drives DecoupledEngine.invalidate through the
+registered listener, so post-update inference matches a fresh engine on
+the mutated graph."""
+import numpy as np
+import pytest
+
+from repro.core.engine import DecoupledEngine
+from repro.gnn.model import GNNConfig
+from repro.graphs.csr import from_edge_list
+from repro.store import StorePolicy
+
+
+def make_graph(v=120, seed=7, extra=3, f=12):
+    rng = np.random.default_rng(seed)
+    src = np.arange(1, v)
+    dst = rng.integers(0, np.maximum(src, 1))
+    es = rng.integers(0, v, size=v * extra)
+    ed = rng.integers(0, v, size=v * extra)
+    feats = rng.standard_normal((v, f)).astype(np.float32)
+    return from_edge_list(np.concatenate([src, es]),
+                          np.concatenate([dst, ed]), v, feats)
+
+
+class TestApplyEdgeUpdates:
+    def test_insert_and_delete_update_structure(self):
+        g = make_graph()
+        # pick a definitely-absent edge and a definitely-present one
+        u = int(np.argmin(g.degrees))
+        w = next(int(x) for x in np.argsort(-g.degrees)
+                 if x != u and x not in g.neighbors(u))
+        present = (w, int(g.neighbors(w)[0]))
+        deg_before = g.degrees.copy()
+        affected = g.apply_edge_updates(insert=[(u, w)], delete=[present])
+        g.validate()
+        assert w in g.neighbors(u) and u in g.neighbors(w)   # symmetrized
+        assert present[1] not in g.neighbors(w)
+        assert set(affected) == {u, w, present[0], present[1]}
+        assert g.degrees[u] == deg_before[u] + 1
+
+    def test_self_loops_and_duplicates_ignored(self):
+        g = make_graph()
+        e_before = g.num_edges
+        existing = (0, int(g.neighbors(0)[0]))
+        g.apply_edge_updates(insert=[(5, 5), existing])
+        assert g.num_edges == e_before            # both were no-ops
+
+    def test_out_of_range_vertex_rejected(self):
+        g = make_graph()
+        with pytest.raises(ValueError, match="outside"):
+            g.apply_edge_updates(insert=[(0, g.num_vertices + 3)])
+
+    def test_listener_notified_and_unregistered_on_close(self):
+        g = make_graph()
+        cfg = GNNConfig(kind="gcn", n_layers=2, receptive_field=16,
+                        f_in=g.feature_dim)
+        eng = DecoupledEngine(g, cfg, batch_size=4,
+                              store=StorePolicy(nbr_cache="lru",
+                                                nbr_capacity=64))
+        assert eng.invalidate in g._listeners
+        eng.infer(np.arange(4), overlap=False)    # populate nbr cache
+        g.apply_edge_updates(insert=[(0, 1)])
+        # targets 0..3 all contain themselves -> their entries dropped
+        assert eng.nbr_cache.stats()["invalidations"] > 0
+        eng.close()
+        assert eng.invalidate not in g._listeners
+
+
+class TestPostUpdateInference:
+    @pytest.mark.parametrize("nbr_cache", ["none", "lru"])
+    def test_matches_fresh_engine_on_mutated_graph(self, nbr_cache):
+        g = make_graph()
+        cfg = GNNConfig(kind="sage", n_layers=2, receptive_field=16,
+                        f_in=g.feature_dim)
+        pol = StorePolicy() if nbr_cache == "none" else \
+            StorePolicy(nbr_cache="lru", nbr_capacity=64)
+        eng = DecoupledEngine(g, cfg, batch_size=4, store=pol)
+        targets = np.arange(4, dtype=np.int64)
+        eng.infer(targets, overlap=False)          # warm caches pre-update
+        # edge updates incident to every tested target: their cached
+        # neighborhoods contain themselves, so invalidation must hit
+        g.apply_edge_updates(insert=[(0, 50), (1, 51)],
+                             delete=[(2, int(g.neighbors(2)[0]))])
+        post = eng.infer(targets, overlap=False).embeddings
+        fresh = DecoupledEngine(g, cfg, params=eng.params, batch_size=4)
+        want = fresh.infer(targets, overlap=False).embeddings
+        np.testing.assert_array_equal(post, want)
+        eng.close()
+        fresh.close()
+
+    def test_resident_store_rows_refresh_on_feature_change(self):
+        g = make_graph()
+        cfg = GNNConfig(kind="gcn", n_layers=2, receptive_field=16,
+                        f_in=g.feature_dim)
+        eng = DecoupledEngine(g, cfg, batch_size=4,
+                              store=StorePolicy(features="resident"))
+        targets = np.arange(4, dtype=np.int64)
+        eng.infer(targets, overlap=False)
+        g.features[0] += 1.0                       # feature mutation
+        g.apply_edge_updates(insert=[(0, 60)])     # structural + notify
+        post = eng.infer(targets, overlap=False).embeddings
+        fresh = DecoupledEngine(g, cfg, params=eng.params, batch_size=4)
+        want = fresh.infer(targets, overlap=False).embeddings
+        np.testing.assert_allclose(post, want, rtol=1e-6, atol=1e-7)
+        eng.close()
+        fresh.close()

@@ -1,0 +1,402 @@
+"""AckProgram IR: lowering registry, per-op mode dispatch, and executor
+equivalence against the pre-IR paths (which are reconstructed here, from
+the layer ops in gnn.layers and the Pallas kernel entry points, exactly as
+engine/gnn_forward composed them before the IR)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core.dse import PlanViolation, explore, plan_covers
+from repro.core.engine import DecoupledEngine
+from repro.core.program import (AckProgram, Aggregate, AttentionScore,
+                                AttentionSoftmax, Classify, Readout,
+                                Residual, Transform, execute, lower,
+                                lower_and_specialize, program_alu_ops,
+                                register_lowering, registered_kinds,
+                                required_adjacency, specialize)
+from repro.core.subgraph import build_batch
+from repro.gnn.layers import (LAYER_APPLY, gat_layer, init_gcn_layer,
+                              readout)
+from repro.gnn.model import GNNConfig, gnn_forward, init_gnn
+from repro.graphs.csr import from_edge_list
+from repro.graphs.synthetic import get_graph
+from repro.kernels import ops as kops
+from repro.serve.gnn_server import GNNServer
+
+KINDS = ("gcn", "sage", "gin", "gat")
+N = 32
+E_PAD = N * (N - 1)
+
+
+@pytest.fixture(scope="module")
+def graph():
+    return get_graph("flickr", scale=0.02, seed=1)   # ~1.8k vertices
+
+
+@pytest.fixture(scope="module")
+def batches(graph):
+    """One padded device batch (dense + sg arrays) per kind-agnostic
+    shape, plus per-kind params."""
+    sb = build_batch(graph, [1, 5, 9, 13], N, e_pad=E_PAD, num_threads=1)
+    out = {}
+    for kind in KINDS:
+        cfg = GNNConfig(kind=kind, n_layers=3, receptive_field=N,
+                        f_in=graph.feature_dim)
+        params = init_gnn(cfg, jax.random.PRNGKey(3))
+        eng = DecoupledEngine(graph, cfg, params=params, batch_size=4,
+                              mode="sg", e_pad=E_PAD)
+        batch = eng.device_batch(sb)    # edge arrays + required adjacency
+        # the legacy reference paths read BOTH adjacencies; the engine
+        # now ships only what its program needs, so add the rest back
+        batch.setdefault("adj", sb.adj)
+        batch.setdefault("adj_mean", sb.adj_mean)
+        eng.close()
+        out[kind] = (cfg, params, batch)
+    return out
+
+
+# -- pre-IR reference implementations ---------------------------------------
+
+
+def legacy_xla(cfg, params, batch, mode):
+    def apply(p, h):
+        if cfg.kind == "gat":
+            return gat_layer(p, h, batch, mode)
+        return LAYER_APPLY[cfg.kind](p, h, batch, mode)
+    h = apply(params["layer0"], batch["feats"])
+    if cfg.n_layers > 1:
+        def body(hh, lp):
+            return apply(lp, hh), None
+        h, _ = jax.lax.scan(body, h, params["layers"])
+    emb = readout(h, batch["mask"], cfg.readout)
+    if cfg.num_classes:
+        emb = emb @ params["cls_w"] + params["cls_b"]
+    return emb
+
+
+def legacy_pallas_dense(cfg, params, batch):
+    """The engine's pre-IR _pallas_layer chain, verbatim."""
+    def apply(p, h, b):
+        adj, adj_mean, mask = b["adj"], b["adj_mean"], b["mask"]
+        if cfg.kind == "gcn":
+            return kops.fused_gnn_layer(adj, h, p["w"], None, p["b"],
+                                        mask, act="relu")
+        if cfg.kind == "sage":
+            return kops.fused_gnn_layer(adj_mean, h, p["w_neigh"],
+                                        p["w_self"], p["b"], mask,
+                                        act="relu")
+        if cfg.kind == "gin":
+            n = h.shape[1]
+            a_gin = jnp.sign(adj_mean) + \
+                (1.0 + p["eps"]) * jnp.eye(n, dtype=h.dtype)
+            hid = kops.fused_gnn_layer(a_gin, h, p["w1"], None, p["b1"],
+                                       mask, act="relu")
+            return kops.fused_gnn_layer(adj, hid, None, p["w2"], p["b2"],
+                                        mask, act="relu")
+        nh = cfg.n_heads
+        z = kops.fused_gnn_layer(adj, h, None, p["w"], None, mask,
+                                 act="none")
+        s_src = jnp.einsum("cnhf,hf->cnh",
+                           z.reshape(*z.shape[:2], nh, -1), p["a_src"])
+        s_dst = jnp.einsum("cnhf,hf->cnh",
+                           z.reshape(*z.shape[:2], nh, -1), p["a_dst"])
+        n = h.shape[1]
+        struct = (jnp.sign(adj_mean) + jnp.eye(n, dtype=h.dtype)) \
+            * mask[:, None, :]
+        out = kops.gat_attention(z, s_src, s_dst, struct, n_heads=nh)
+        return jax.nn.elu(out + p["b"]) * mask[..., None]
+
+    h = apply(params["layer0"], batch["feats"], batch)
+    if cfg.n_layers > 1:
+        def body(hh, lp):
+            return apply(lp, hh, batch), None
+        h, _ = jax.lax.scan(body, h, params["layers"])
+    return readout(h, batch["mask"], cfg.readout)
+
+
+def run_program(cfg, params, batch, force, impl):
+    prog, dec = lower_and_specialize(cfg, force=force)
+    emb, _ = execute(prog, params, batch, impl=impl)
+    return np.asarray(emb), dec
+
+
+# -- lowering table ----------------------------------------------------------
+
+
+class TestLowering:
+    def test_builtin_kinds_registered(self):
+        assert set(KINDS) <= set(registered_kinds())
+
+    @pytest.mark.parametrize("kind,expect", [
+        ("gcn", [Aggregate, Transform]),
+        ("sage", [Aggregate, Transform]),
+        ("gin", [Aggregate, Residual, Transform, Transform]),
+        ("gat", [Transform, AttentionScore, AttentionSoftmax]),
+    ])
+    def test_layer_templates(self, kind, expect):
+        cfg = GNNConfig(kind=kind, n_layers=2, receptive_field=N, f_in=8)
+        prog = lower(cfg)
+        assert [type(op) for op in prog.layer0] == expect
+        assert prog.layer0 == prog.inner
+        assert isinstance(prog.tail[0], Readout)
+
+    def test_classify_tail_and_alu_ops(self):
+        cfg = GNNConfig(kind="gcn", n_layers=2, receptive_field=N,
+                        f_in=8, num_classes=7)
+        prog = lower(cfg)
+        assert isinstance(prog.tail[-1], Classify)
+        assert "matmul" in program_alu_ops(cfg)
+
+    def test_required_adjacency(self):
+        mk = lambda k: lower(GNNConfig(kind=k, n_layers=2,
+                                       receptive_field=N, f_in=8))
+        assert required_adjacency(mk("gcn")) == ("adj",)
+        assert required_adjacency(mk("sage")) == ("adj_mean",)
+        assert required_adjacency(mk("gat")) == ("adj_mean",)
+
+    def test_unknown_kind_actionable(self):
+        with pytest.raises(KeyError, match="register_lowering"):
+            lower(GNNConfig(kind="nope", n_layers=2, receptive_field=N,
+                            f_in=8))
+
+    def test_execute_rejects_unspecialized(self, batches):
+        cfg, params, batch = batches["gcn"]
+        with pytest.raises(ValueError, match="specialize"):
+            execute(lower(cfg), params, batch)
+
+
+# -- executor equivalence vs the pre-IR paths -------------------------------
+
+
+class TestExecutorEquivalence:
+    @pytest.mark.parametrize("kind", KINDS)
+    def test_xla_dense_bitwise(self, kind, batches):
+        cfg, params, batch = batches[kind]
+        got, dec = run_program(cfg, params, batch, "dense", "xla")
+        want = np.asarray(legacy_xla(cfg, params, batch, "dense"))
+        np.testing.assert_array_equal(got, want)
+        assert dec.mode == "dense" and dec.n_sg == 0
+
+    @pytest.mark.parametrize("kind", KINDS)
+    def test_xla_sg_matches(self, kind, batches):
+        cfg, params, batch = batches[kind]
+        got, dec = run_program(cfg, params, batch, "sg", "xla")
+        want = np.asarray(legacy_xla(cfg, params, batch, "sg"))
+        # identical segment-op composition -> bitwise here too
+        np.testing.assert_array_equal(got, want)
+        # transforms stay systolic: the "sg" program is heterogeneous
+        assert dec.mode == "sg"
+        assert dec.n_dense > 0 and dec.n_sg > 0
+
+    @pytest.mark.parametrize("kind", KINDS)
+    def test_pallas_dense_bitwise(self, kind, batches):
+        cfg, params, batch = batches[kind]
+        got, _ = run_program(cfg, params, batch, "dense", "pallas")
+        want = np.asarray(legacy_pallas_dense(cfg, params, batch))
+        np.testing.assert_array_equal(got, want)
+
+    @pytest.mark.parametrize("kind", KINDS)
+    def test_pallas_sg_allclose(self, kind, batches):
+        """Pre-IR engines fell back to XLA for sg; the executor now runs
+        the Pallas scatter-gather kernel — same math, different kernel."""
+        cfg, params, batch = batches[kind]
+        got, _ = run_program(cfg, params, batch, "sg", "pallas")
+        want = np.asarray(legacy_xla(cfg, params, batch, "sg"))
+        scale = np.abs(want).max()
+        np.testing.assert_allclose(got / scale, want / scale,
+                                   rtol=2e-4, atol=1e-5)
+
+    @pytest.mark.parametrize("impl", ["xla", "pallas"])
+    @pytest.mark.parametrize("kind", KINDS)
+    def test_mixed_per_op(self, kind, impl, batches):
+        """Force ONLY the aggregation-family ops to sg: the compiled
+        program then mixes sg aggregation with dense transforms (the
+        paper's per-kernel mux) and still matches the reference."""
+        cfg, params, batch = batches[kind]
+        force = {"Aggregate": "sg", "AttentionSoftmax": "sg"}
+        got, dec = run_program(cfg, params, batch, force, impl)
+        want = np.asarray(legacy_xla(cfg, params, batch, "sg"))
+        scale = np.abs(want).max()
+        np.testing.assert_allclose(got / scale, want / scale,
+                                   rtol=2e-4, atol=1e-5)
+        assert dec.n_sg > 0 and dec.n_dense > 0
+        assert set(dec.modes) == {"dense", "sg"}
+
+    def test_gnn_forward_is_program_backed(self, batches):
+        cfg, params, batch = batches["gcn"]
+        emb, h = gnn_forward(cfg, params, batch, mode="dense")
+        got, _ = run_program(cfg, params, batch, "dense", "xla")
+        np.testing.assert_array_equal(np.asarray(emb), got)
+        assert h.shape == batch["feats"].shape[:2] + (cfg.f_hidden,)
+
+
+# -- per-op auto dispatch ----------------------------------------------------
+
+
+def sparse_graph(v=400, edges=40, f=16, seed=0):
+    rng = np.random.default_rng(seed)
+    src = rng.choice(v, edges, replace=False)
+    dst = (src + 1) % v
+    feats = rng.standard_normal((v, f)).astype(np.float32)
+    return from_edge_list(src, dst, v, feats), src.astype(np.int64)
+
+
+class TestPerOpAutoDispatch:
+    def test_auto_program_mixes_modes_on_sparse_graph(self):
+        """The acceptance shape: an auto-specialized program holding BOTH
+        an sg op (aggregation over an ultra-sparse neighborhood) and
+        dense ops (the wide transforms) in one compiled datapath."""
+        g, hot = sparse_graph()
+        cfg = GNNConfig(kind="gcn", n_layers=2, receptive_field=N,
+                        f_in=g.feature_dim, f_hidden=256)
+        with DecoupledEngine(g, cfg, batch_size=4, mode="auto") as eng:
+            assert eng.needs_edges
+            modes = {d.mode for d in eng.decision}
+            assert modes == {"dense", "sg"}
+            agg = [d for d in eng.decision if d.op.startswith("Aggregate")]
+            assert all(d.mode == "sg" for d in agg)
+            tfs = [d for d in eng.decision if d.op.startswith("Transform")]
+            assert all(d.mode == "dense" for d in tfs)
+            auto = eng.infer(hot[:4], overlap=False)
+        with DecoupledEngine(g, cfg, params=None, batch_size=4, seed=0,
+                             mode="dense") as dense_eng:
+            ref = dense_eng.infer(hot[:4], overlap=False)
+        np.testing.assert_allclose(auto.embeddings, ref.embeddings,
+                                   rtol=1e-4, atol=1e-5)
+
+    def test_dense_graph_stays_dense(self, graph):
+        cfg = GNNConfig(kind="gcn", n_layers=2, receptive_field=N,
+                        f_in=graph.feature_dim)
+        with DecoupledEngine(graph, cfg, batch_size=4) as eng:
+            assert eng.mode == "dense" and not eng.needs_edges
+            assert all(d.mode == "dense" for d in eng.decision)
+
+    def test_decision_reason_reports_compared_quantities(self):
+        from repro.core.ack import choose_mode
+        d = choose_mode(128, avg_edges=2000.0, f=256)
+        assert d.reason == "N=128 vs 2E=4000"
+
+    def test_inference_result_carries_per_op_decisions(self, graph):
+        cfg = GNNConfig(kind="sage", n_layers=2, receptive_field=N,
+                        f_in=graph.feature_dim)
+        with DecoupledEngine(graph, cfg, batch_size=4) as eng:
+            res = eng.infer(np.arange(4), overlap=False)
+        assert len(res.decision) == len(lower(cfg).ops)
+        assert "dense" in res.decision.summary
+        sites = [d.site for d in res.decision]
+        assert "layer0[0]" in sites and "tail[0]" in sites
+
+
+# -- runtime registry: a custom kind serves with zero core edits -------------
+
+
+@register_lowering(
+    "toygcn",
+    layer_init=lambda cfg, key, fi, fo: init_gcn_layer(key, fi, fo))
+def lower_toygcn(cfg):
+    layer = (Aggregate(norm="mean"),
+             Transform(w="w", b="b", act="relu"))
+    tail = (Readout(kind=cfg.readout),)
+    return AckProgram(kind=cfg.kind, layer0=layer, inner=layer,
+                      tail=tail, n_layers=cfg.n_layers)
+
+
+class TestRuntimeRegistry:
+    def test_custom_kind_serves_through_shared_plan(self, graph):
+        cfg = GNNConfig(kind="toygcn", n_layers=2, receptive_field=N,
+                        f_in=graph.feature_dim)
+        base = GNNConfig(kind="gcn", n_layers=2, receptive_field=N,
+                         f_in=graph.feature_dim)
+        toy = DecoupledEngine(graph, cfg, batch_size=4)
+        ref = DecoupledEngine(graph, base, batch_size=4)
+        srv = GNNServer(max_wait_s=0.01)
+        srv.register("toygcn", toy)
+        srv.register("gcn", ref)            # one shared plan covers both
+        assert plan_covers(srv.plan, cfg) == []
+        srv.start()
+        reqs = [srv.submit(i, model="toygcn") for i in range(6)]
+        srv.drain(reqs, timeout=120)
+        srv.stop()
+        want = toy.infer(np.arange(6), overlap=False).embeddings
+        got = np.stack([r.embedding for r in reqs])
+        np.testing.assert_allclose(got, want, rtol=1e-5, atol=1e-6)
+        rep = srv.report()["models"]["toygcn"]
+        assert rep["ack"]["mode"] == "dense"
+        toy.close()
+        ref.close()
+
+    def test_unregistered_kind_rejected_with_actionable_message(self,
+                                                                graph):
+        plan = explore([GNNConfig(kind="gcn", n_layers=2,
+                                  receptive_field=N, f_in=8)])
+        bad = GNNConfig(kind="notakind", n_layers=2, receptive_field=N,
+                        f_in=8)
+        reasons = plan_covers(plan, bad)
+        assert reasons and "register_lowering" in reasons[0]
+        with pytest.raises(PlanViolation, match="notakind"):
+            from repro.core.dse import validate_models
+            validate_models(plan, [bad])
+
+    def test_explore_covers_custom_kind(self, graph):
+        cfg = GNNConfig(kind="toygcn", n_layers=2, receptive_field=N,
+                        f_in=graph.feature_dim)
+        plan = explore([cfg])
+        assert plan.ops_ok and plan_covers(plan, cfg) == []
+
+
+# -- specialize API ----------------------------------------------------------
+
+
+class TestSpecialize:
+    def test_force_dict_by_site(self):
+        cfg = GNNConfig(kind="gcn", n_layers=3, receptive_field=N, f_in=8)
+        prog, dec = specialize(lower(cfg), n=N, avg_edges=4.0,
+                               f_in=8, f_hidden=cfg.f_hidden,
+                               force={"layer0[0]": "dense",
+                                      "inner[0]": "sg"})
+        by_site = {d.site: d.mode for d in dec}
+        assert by_site["layer0[0]"] == "dense"
+        assert by_site["inner[0]"] == "sg"
+        assert dec.mode == "mixed"
+
+    def test_lru_lowering_cache_returns_same_program(self):
+        cfg = GNNConfig(kind="gcn", n_layers=2, receptive_field=N, f_in=8)
+        assert lower(cfg) is lower(cfg)
+
+    def test_one_layer_program_reports_only_executed_ops(self):
+        cfg = GNNConfig(kind="gcn", n_layers=1, receptive_field=N, f_in=8)
+        prog = lower(cfg)
+        assert not any(s.startswith("inner") for s, _ in prog.ops)
+        sprog, dec = specialize(prog, n=N, avg_edges=100.0, f_in=8,
+                                f_hidden=cfg.f_hidden)
+        assert all(not d.site.startswith("inner") for d in dec)
+        assert sprog.specialized
+
+    def test_input_width_params_per_kind(self):
+        """The engine's Pallas row-padding set is read off the program,
+        not a hand-kept weight-name tuple."""
+        from repro.core.program import input_width_params
+        mk = lambda k: lower(GNNConfig(kind=k, n_layers=2,
+                                       receptive_field=N, f_in=8))
+        assert input_width_params(mk("gcn")) == ("w",)
+        assert set(input_width_params(mk("sage"))) == {"w_neigh",
+                                                       "w_self"}
+        assert input_width_params(mk("gin")) == ("w1",)
+        assert input_width_params(mk("gat")) == ("w",)
+
+    def test_identity_layer_lowering_rejected(self):
+        from repro.gnn.layers import init_gcn_layer
+
+        @register_lowering("idkind",
+                           layer_init=lambda c, k, fi, fo:
+                           init_gcn_layer(k, fi, fo))
+        def lower_idkind(cfg):
+            lay = (Aggregate(norm="mean"),
+                   Transform(w="w", b="b", out="z2"))   # never writes "h"
+            return AckProgram(cfg.kind, lay, lay, (Readout(),),
+                              cfg.n_layers)
+
+        with pytest.raises(ValueError, match="identity"):
+            lower(GNNConfig(kind="idkind", n_layers=2,
+                            receptive_field=N, f_in=8))

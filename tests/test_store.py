@@ -44,8 +44,10 @@ class TestStorePolicy:
             StorePolicy(nbr_cache="lru", pinned_targets=(1, 2))
 
     def test_dedup_features_maps_to_packed(self, graph, cfg):
-        eng = DecoupledEngine(graph, cfg, batch_size=8,
-                              dedup_features=True)
+        # deprecated spelling: still maps to the packed strategy, but warns
+        with pytest.warns(DeprecationWarning, match="dedup_features"):
+            eng = DecoupledEngine(graph, cfg, batch_size=8,
+                                  dedup_features=True)
         assert eng.store_policy.features == "packed"
         assert eng.dedup_features
         eng.close()
