@@ -16,7 +16,7 @@ import traceback
 from benchmarks import (bench_eq1_loadbalance, bench_fig3_breakdown,
                         bench_fig8_latency, bench_fig10_batch,
                         bench_kernels, bench_program,
-                        bench_serve_multimodel, bench_store,
+                        bench_serve_multimodel, bench_shard, bench_store,
                         bench_table5_load, bench_table6_ini)
 
 SUITES = {
@@ -30,6 +30,7 @@ SUITES = {
     "serve_multimodel": bench_serve_multimodel.run_suite,
     "store": bench_store.run_suite,
     "program": bench_program.run_suite,
+    "shard": bench_shard.run_suite,
 }
 
 

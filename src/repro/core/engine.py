@@ -174,9 +174,13 @@ class DecoupledEngine:
         if missing:
             gen = self.nbr_cache.generation   # pre-computation epoch: an
             # invalidate() landing mid-push makes put() drop the result
-            for t, nl in zip(missing, ini_batch(self.graph, missing, n,
-                                                a, e, self.num_threads)):
-                self.nbr_cache.put(nbr_key(t, n, a, e), nl, generation=gen)
+            computed = ini_batch(self.graph, missing, n, a, e,
+                                 self.num_threads, with_frontier=True)
+            for t, (nl, frontier) in zip(missing, computed):
+                # the full touched set rides along so invalidate() is
+                # exact (an update below the top-N cutoff still drops us)
+                self.nbr_cache.put(nbr_key(t, n, a, e), nl,
+                                   generation=gen, frontier=frontier)
                 found[t] = nl
         return ([found[t] for t in targets],
                 len(found) - len(missing), len(missing))
@@ -201,9 +205,13 @@ class DecoupledEngine:
         dense = other + len(node_lists) * self.cfg.receptive_field \
             * self.f_pad * 4
         d.update(payload)
+        # sharded store: per-shard share of this payload's bytes (pure
+        # function of the payload — safe from concurrent prepare threads)
+        per_shard = getattr(src, "shard_metrics_for", None)
         self.scheduler.note_host_metrics(
             bytes_shipped=shipped, bytes_dense=dense, cache_hits=hits,
-            cache_misses=misses, dedup_ratio=dedup)
+            cache_misses=misses, dedup_ratio=dedup,
+            shard_bytes=per_shard(payload) if per_shard else None)
         return d
 
     def device_batch(self, sb: SubgraphBatch,
@@ -271,9 +279,9 @@ class DecoupledEngine:
     # -- store hooks ---------------------------------------------------------
     def invalidate(self, vertices) -> int:
         """Graph-update hook, both store levels: drop every cached
-        neighborhood whose SELECTED top-N list contains any of
-        ``vertices`` (see NeighborhoodCache.invalidate for the
-        approximation this implies), and re-upload those vertices'
+        neighborhood whose push FRONTIER contains any of ``vertices``
+        (exact — the miss path caches each push's full touched set, see
+        NeighborhoodCache.invalidate), and re-upload those vertices'
         device-resident feature rows from ``graph.features`` (so feature
         mutations take effect without an engine rebuild). Returns the
         number of cache entries dropped."""
@@ -282,6 +290,18 @@ class DecoupledEngine:
         if self.nbr_cache is None:
             return 0
         return self.nbr_cache.invalidate(vertices)
+
+    def repin(self, **kwargs) -> dict:
+        """Online residency rebalance (sharded store only): re-derive the
+        shard-resident set from the PPR mass observed since start — hot
+        cold-rows promote, dead resident rows demote, skewed shards even
+        out. In-flight batches keep their placement snapshot (the payload
+        carries its generation), so serving never pauses."""
+        if not hasattr(self._fsource, "repin"):
+            raise ValueError(
+                f"store strategy {self._fsource.name!r} has no repin(); "
+                "use StorePolicy(features='sharded', ...)")
+        return self._fsource.repin(**kwargs)
 
     def store_report(self) -> dict:
         """Cache/transfer state of this deployment's store subsystem."""

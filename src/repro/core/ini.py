@@ -81,9 +81,17 @@ def ppr_local_push(g: CSRGraph, target: int, alpha: float = 0.15,
 
 
 def select_important(g: CSRGraph, target: int, n: int, alpha: float = 0.15,
-                     eps: float = 1e-4) -> np.ndarray:
-    """Top-(n-1) PPR neighbors plus the target itself (target first)."""
+                     eps: float = 1e-4,
+                     with_frontier: bool = False) -> np.ndarray:
+    """Top-(n-1) PPR neighbors plus the target itself (target first).
+
+    ``with_frontier=True`` additionally returns the push's full touched
+    set (every vertex the local push reached, sorted) — the exact
+    invalidation footprint: a graph update at ANY touched vertex can
+    shift the target's PPR scores and therefore its top-N selection,
+    even when that vertex fell below the top-N cutoff."""
     verts, scores = ppr_local_push(g, target, alpha, eps)
+    frontier = np.sort(verts) if with_frontier else None
     keep = verts != target
     verts, scores = verts[keep], scores[keep]
     if len(verts) > n - 1:
@@ -91,17 +99,23 @@ def select_important(g: CSRGraph, target: int, n: int, alpha: float = 0.15,
         verts = verts[top[np.argsort(-scores[top])]]
     else:
         verts = verts[np.argsort(-scores)]
-    return np.concatenate([[target], verts]).astype(np.int64)
+    sel = np.concatenate([[target], verts]).astype(np.int64)
+    return (sel, frontier) if with_frontier else sel
 
 
 def ini_batch(g: CSRGraph, targets, n: int, alpha: float = 0.15,
-              eps: float = 1e-4, num_threads: int = 8) -> List[np.ndarray]:
-    """INI for a batch of targets on a host thread pool (paper: 8 threads)."""
+              eps: float = 1e-4, num_threads: int = 8,
+              with_frontier: bool = False) -> List[np.ndarray]:
+    """INI for a batch of targets on a host thread pool (paper: 8 threads).
+
+    ``with_frontier=True`` returns ``(node_list, touched_set)`` pairs —
+    see ``select_important``."""
+    def one(t):
+        return select_important(g, int(t), n, alpha, eps, with_frontier)
     if num_threads <= 1 or len(targets) <= 1:
-        return [select_important(g, int(t), n, alpha, eps) for t in targets]
+        return [one(t) for t in targets]
     with ThreadPoolExecutor(max_workers=num_threads) as ex:
-        return list(ex.map(
-            lambda t: select_important(g, int(t), n, alpha, eps), targets))
+        return list(ex.map(one, targets))
 
 
 def ppr_power_iteration(g: CSRGraph, target: int, alpha: float = 0.15,

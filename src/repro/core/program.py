@@ -105,11 +105,16 @@ class Aggregate(AckOp):
 
 @dataclass(frozen=True)
 class Residual(AckOp):
-    """into += (1 + p[eps_param]) * src  (GIN's (1+eps)-weighted self term;
-    plain residual when ``eps_param`` is None)."""
+    """into = (1 + p[eps_param]) * src + into_gain * into  (GIN's
+    (1+eps)-weighted self term at the default into_gain=1; plain residual
+    when ``eps_param`` is None). ``src`` may name the ``h0`` register —
+    the propagation ENTRY state (the layer-0 prediction inside the inner
+    scan), which is what APPNP's teleport term reads. ``into_gain`` is a
+    compile-time constant (e.g. 1 - alpha), not a parameter."""
     src: str = "h_in"
     into: str = "z"
     eps_param: Optional[str] = None
+    into_gain: float = 1.0
 
     @property
     def alu(self) -> frozenset:
@@ -340,7 +345,7 @@ def input_width_params(prog: AckProgram) -> Tuple[str, ...]:
     features for MXU alignment. Derived by tracking which registers still
     carry the input width through the op stream (Aggregate preserves its
     source's width; Transform re-widens its output to f_out)."""
-    at_input = {"h", "h_in"}
+    at_input = {"h", "h_in", "h0"}     # h0 == the layer input in layer0
     keys = []
     for op in prog.layer0:
         if isinstance(op, Aggregate):
@@ -563,7 +568,8 @@ def _step_aggregate(op: Aggregate, impl: str):
 def _step_residual(op: Residual):
     def step(p, regs, batch):
         scale = (1.0 + p[op.eps_param]) if op.eps_param else 1.0
-        regs[op.into] = scale * regs[op.src] + regs[op.into]
+        regs[op.into] = scale * regs[op.src] \
+            + op.into_gain * regs[op.into]
     return step
 
 
@@ -717,7 +723,10 @@ def _compile_section(seq: Sequence[AckOp], impl: str):
             j, res = i + 1, None
             if (j < len(seq) and isinstance(seq[j], Residual)
                     and seq[j].into == op.out
-                    and seq[j].src in ("h", "h_in")):
+                    and seq[j].src in ("h", "h_in")
+                    and seq[j].into_gain == 1.0):
+                # the fused kernel folds the residual as A + scale*I,
+                # which assumes the aggregate term is unscaled
                 res, j = seq[j], j + 1
             if (j < len(seq) and isinstance(seq[j], Transform)
                     and seq[j].src == op.out):
@@ -738,8 +747,11 @@ def _compile_section(seq: Sequence[AckOp], impl: str):
             raise TypeError(f"op {op!r} is not a layer op")
         i += 1
 
-    def apply(p, h, batch):
-        regs = {"h": h, "h_in": h}
+    def apply(p, h, batch, h0=None):
+        # "h0" is the propagation ENTRY state: the layer input for
+        # layer0, the post-layer0 prediction (constant across the inner
+        # scan) for inner layers — APPNP's teleport anchor
+        regs = {"h": h, "h_in": h, "h0": h if h0 is None else h0}
         for s in steps:
             s(p, regs, batch)
         return regs["h"]
@@ -758,9 +770,10 @@ def execute(prog: AckProgram, params, batch, impl: str = "xla"):
     h = apply0(params["layer0"], batch["feats"], batch)
     if prog.n_layers > 1:
         apply_i = _compile_section(prog.inner, impl)
+        h0 = h                      # scan-entry prediction, teleport anchor
 
         def body(hh, lp):
-            return apply_i(lp, hh, batch), None
+            return apply_i(lp, hh, batch, h0=h0), None
         h, _ = jax.lax.scan(body, h, params["layers"])
     emb = h
     for op in prog.tail:

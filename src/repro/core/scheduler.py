@@ -49,6 +49,9 @@ class SchedulerStats:
     cache_hits: int = 0
     cache_misses: int = 0
     last_dedup_ratio: Optional[float] = None
+    # sharded feature store only: cumulative host->device bytes PER SHARD
+    # (empty for unsharded deployments)
+    shard_bytes: List[int] = field(default_factory=list)
 
     @property
     def overlap_fraction(self) -> float:
@@ -71,16 +74,29 @@ class SchedulerStats:
         return self.bytes_shipped / self.bytes_dense if self.bytes_dense \
             else 1.0
 
+    @property
+    def shard_balance(self) -> float:
+        """max/mean of per-shard shipped bytes (1.0 = perfectly even;
+        1.0 also when the deployment is unsharded)."""
+        if not self.shard_bytes:
+            return 1.0
+        mean = sum(self.shard_bytes) / len(self.shard_bytes)
+        return max(self.shard_bytes) / mean if mean > 0 else 1.0
+
     def summary(self) -> dict:
-        return {"t_wall": self.t_wall, "t_host": self.t_host_total,
-                "t_device": self.t_device_total,
-                "t_init": self.t_initialization,
-                "overlap": round(self.overlap_fraction, 3),
-                "batches": self.n_batches,
-                "bytes_shipped": self.bytes_shipped,
-                "transfer_ratio": round(self.transfer_ratio, 4),
-                "cache_hit_rate": round(self.cache_hit_rate, 4),
-                "dedup_ratio": self.last_dedup_ratio}
+        d = {"t_wall": self.t_wall, "t_host": self.t_host_total,
+             "t_device": self.t_device_total,
+             "t_init": self.t_initialization,
+             "overlap": round(self.overlap_fraction, 3),
+             "batches": self.n_batches,
+             "bytes_shipped": self.bytes_shipped,
+             "transfer_ratio": round(self.transfer_ratio, 4),
+             "cache_hit_rate": round(self.cache_hit_rate, 4),
+             "dedup_ratio": self.last_dedup_ratio}
+        if self.shard_bytes:
+            d["shard_bytes"] = list(self.shard_bytes)
+            d["shard_balance"] = round(self.shard_balance, 4)
+        return d
 
     def record(self, t_host: float, t_device: float):
         if not self.host_times:
@@ -233,12 +249,14 @@ class PipelineScheduler:
     def note_host_metrics(self, *, bytes_shipped: int = 0,
                           bytes_dense: int = 0, cache_hits: int = 0,
                           cache_misses: int = 0,
-                          dedup_ratio: Optional[float] = None):
+                          dedup_ratio: Optional[float] = None,
+                          shard_bytes: Optional[Sequence[int]] = None):
         """Accumulate transfer/cache counters for one prepared batch.
 
         Called by the host_fn itself (it alone knows what it shipped and
         what the dense baseline would have been); safe from the host pool
-        threads and from run()'s serial path alike."""
+        threads and from run()'s serial path alike. ``shard_bytes`` (one
+        entry per feature-store shard) accumulates elementwise."""
         with self._lock:
             s = self.stats
             s.bytes_shipped += int(bytes_shipped)
@@ -247,6 +265,12 @@ class PipelineScheduler:
             s.cache_misses += int(cache_misses)
             if dedup_ratio is not None:
                 s.last_dedup_ratio = float(dedup_ratio)
+            if shard_bytes is not None:
+                if len(s.shard_bytes) < len(shard_bytes):
+                    s.shard_bytes += [0] * (len(shard_bytes)
+                                            - len(s.shard_bytes))
+                for i, b in enumerate(shard_bytes):
+                    s.shard_bytes[i] += int(b)
 
     def flush(self, timeout: Optional[float] = None):
         """Block until every submitted batch has completed."""

@@ -23,6 +23,20 @@ from repro.launch.mesh import data_axes
 BLOCK_KEYS = ("blocks", "dense_blocks", "enc_blocks")
 
 
+def shard_devices(num_shards: int) -> list:
+    """Device list backing ``num_shards`` logical feature-store shards.
+
+    One device per shard when the host has enough; otherwise shards are
+    simulated — every table lands on the default device but keeps its own
+    budget/placement accounting (the store's ``simulated`` flag reports
+    which regime is active). The same helper keeps the store and any
+    future mesh-based layout agreeing on device order."""
+    devs = jax.devices()
+    if len(devs) >= num_shards:
+        return list(devs[:num_shards])
+    return [devs[0]] * num_shards
+
+
 def activation_rules(cfg: ModelConfig, mesh) -> Dict[str, Any]:
     """Logical axis -> mesh axis mapping for repro.models.common.shard()."""
     da = data_axes(mesh)

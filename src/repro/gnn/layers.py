@@ -71,6 +71,20 @@ def init_gin_layer(key, f_in, f_out, dtype=jnp.float32):
             "eps": jnp.zeros((), dtype)}
 
 
+def init_appnp_layer(key, f_in, f_out, alpha=0.15, dtype=jnp.float32):
+    """APPNP: layer0 is the prediction MLP; inner layers are
+    propagation-ONLY — one teleport scalar, no transform weights. The
+    inner Residual reads the ``h0`` register (the post-layer0 prediction,
+    the APPNP teleport anchor) with into_gain = 1 - alpha, so each step
+    is exactly h' = (1-a) A_hat h + (1 + teleport) h0 — the APPNP power
+    iteration when 1 + teleport = alpha. ``teleport`` stays learnable;
+    ``w``/``b`` ride along so the stacked inner params give lax.scan its
+    length (the propagation ops never read them)."""
+    return {"w": dense_init(key, (f_in, f_out), dtype=dtype),
+            "b": jnp.zeros((f_out,), dtype),
+            "teleport": jnp.asarray(alpha - 1.0, dtype)}
+
+
 def init_gat_layer(key, f_in, f_out, n_heads, dtype=jnp.float32):
     assert f_out % n_heads == 0
     ks = split_keys(key, 3)

@@ -15,6 +15,10 @@ differing only in feature widths):
   gin   Aggregate[binary] -> Residual[(1+eps) h]
                           -> Transform[w1] -> Transform[w2]   (relu, relu)
   gat   Transform[w] (none) -> AttentionScore -> AttentionSoftmax (elu)
+  appnp layer0: Transform[w] (relu)   — the prediction MLP
+        inner:  Aggregate[gcn] -> Residual[(1+teleport) h0, gain 1-a]
+        (propagation-only inner template: NO Transform — h' =
+        (1-a) A_hat h + (1+teleport) h0, the exact APPNP power step)
 
 Tail: Readout[cfg.readout] and, when ``cfg.num_classes`` is set, Classify.
 """
@@ -26,8 +30,9 @@ from repro.core.program import (AckOp, AckProgram, Aggregate,
                                 AttentionScore, AttentionSoftmax, Classify,
                                 Readout, Residual, Transform,
                                 register_lowering)
-from repro.gnn.layers import (init_gat_layer, init_gcn_layer,
-                              init_gin_layer, init_sage_layer)
+from repro.gnn.layers import (init_appnp_layer, init_gat_layer,
+                              init_gcn_layer, init_gin_layer,
+                              init_sage_layer)
 
 
 def _tail(cfg) -> Tuple[AckOp, ...]:
@@ -73,6 +78,27 @@ def lower_gin(cfg) -> AckProgram:
                   masked=False),
         Transform(w="w2", b="b2", act="relu", src="h2", out="h"),
     ))
+
+
+@register_lowering("appnp",
+                   layer_init=lambda cfg, key, fi, fo:
+                   init_appnp_layer(key, fi, fo, cfg.ppr_alpha))
+def lower_appnp(cfg) -> AckProgram:
+    """Predict-then-propagate: layer0 is the MLP, every inner layer is a
+    PROPAGATION-ONLY template (Aggregate + teleport Residual, no
+    Transform) — the op-vocabulary stress case: a layer section with no
+    weight matmul, whose mux'd Aggregate still gets its own dense/sg
+    decision. The Residual teleports to the ``h0`` register (the
+    post-layer0 prediction) with into_gain = 1 - alpha: h' =
+    (1-a) A_hat h + (1+teleport) h0, the exact APPNP power step at the
+    initializer's 1 + teleport = alpha."""
+    return AckProgram(kind=cfg.kind, layer0=(
+        Transform(w="w", b="b", act="relu", src="h", out="h"),
+    ), inner=(
+        Aggregate(norm="gcn", src="h", out="h"),
+        Residual(src="h0", into="h", eps_param="teleport",
+                 into_gain=1.0 - cfg.ppr_alpha),
+    ), tail=_tail(cfg), n_layers=cfg.n_layers)
 
 
 @register_lowering("gat",

@@ -171,6 +171,11 @@ class _ModelLane:
         r["transfer_ratio"] = round(sched.transfer_ratio, 4)
         r["cache_hit_rate"] = round(sched.cache_hit_rate, 4)
         r["dedup_ratio"] = sched.last_dedup_ratio
+        if sched.shard_bytes:
+            # sharded feature store: per-shard link bytes + skew (1.0 =
+            # perfectly even traffic across shards)
+            r["shard_bytes"] = list(sched.shard_bytes)
+            r["shard_balance"] = round(sched.shard_balance, 4)
         r["store"] = self.engine.store_report()
         return r
 

@@ -7,7 +7,9 @@ from repro.store.feature_store import (DenseFeatureShipper,
                                        build_feature_source)
 from repro.store.nbr_cache import NeighborhoodCache, nbr_key
 from repro.store.policy import StorePolicy
+from repro.store.sharded import ShardedFeatureStore
 
 __all__ = ["StorePolicy", "NeighborhoodCache", "nbr_key",
            "DeviceFeatureStore", "PackedFeatureShipper",
-           "DenseFeatureShipper", "build_feature_source"]
+           "DenseFeatureShipper", "ShardedFeatureStore",
+           "build_feature_source"]

@@ -110,8 +110,9 @@ class DeviceFeatureStore:
 
     Layout: one device table [R + 1, f_pad]; slot 0 is the zero pad row
     (masked subgraph slots), slots 1..R are resident vertices. A batch's
-    payload is a [C, N] int32 slot map plus a [M, f_pad] miss block of
-    host-partition rows, addressed as slots R+1..R+M for that batch only.
+    payload is a [C, N] int32 slot map plus a [M, f_in] miss block of
+    host-partition rows (padded to f_pad on the device — the link never
+    carries pad zeros), addressed as slots R+1..R+M for that batch only.
 
     ``budget_bytes=None`` pins the whole matrix (full-resident). Otherwise
     the top rows under the budget by ``hot_scores`` (default: degree — the
@@ -172,10 +173,14 @@ class DeviceFeatureStore:
         if len(miss_ids):
             slots[missing] = self.num_resident + 1 + \
                 np.searchsorted(miss_ids, ids[missing])
-            miss_feats = pad_feature_dim(self.graph.features[miss_ids],
-                                         self.f_pad)
+            # the miss block ships at f_in and is padded on the DEVICE
+            # (device_feats): the resident table carries the MXU pad
+            # columns already, so shipping them per batch would charge
+            # the link — and bytes_shipped — for resident-table layout
+            # instead of just the miss rows themselves
+            miss_feats = self.graph.features[miss_ids]
         else:
-            miss_feats = np.zeros((0, self.f_pad), np.float32)
+            miss_feats = np.zeros((0, self.graph.feature_dim), np.float32)
         with self._lock:
             self.lookups += int(valid.sum())
             self.resident_lookups += int(valid.sum() - missing.sum())
@@ -195,7 +200,8 @@ class DeviceFeatureStore:
         if miss.shape[0] == 0:
             return res
         mi = jnp.clip(slots - self.num_resident - 1, 0, miss.shape[0] - 1)
-        m = jnp.take(jnp.asarray(miss), mi, axis=0)
+        m = jnp.take(pad_feature_dim(jnp.asarray(miss), self.f_pad), mi,
+                     axis=0)
         return jnp.where((slots > self.num_resident)[..., None], m, res)
 
     def refresh_features(self, vertices) -> int:
@@ -238,10 +244,17 @@ def build_feature_source(graph: CSRGraph, policy, f_pad: int,
         return DenseFeatureShipper(graph, f_pad)
     if policy.features == "packed":
         return PackedFeatureShipper(graph, f_pad)
+    if hot_scores is None and policy.hot_scores is not None:
+        hot_scores = np.asarray(policy.hot_scores, np.float64)
     if policy.features == "resident":
-        if hot_scores is None and policy.hot_scores is not None:
-            hot_scores = np.asarray(policy.hot_scores, np.float64)
         return DeviceFeatureStore(graph, f_pad,
                                   budget_bytes=policy.hbm_budget_bytes,
                                   hot_scores=hot_scores)
+    if policy.features == "sharded":
+        from repro.store.sharded import ShardedFeatureStore
+        return ShardedFeatureStore(graph, f_pad,
+                                   num_shards=policy.num_shards,
+                                   placement=policy.placement,
+                                   budget_bytes=policy.shard_budget_bytes,
+                                   hot_scores=hot_scores)
     raise ValueError(f"unknown feature strategy {policy.features!r}")

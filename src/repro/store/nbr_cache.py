@@ -5,9 +5,11 @@ Eq. 2). Under skewed traffic the same targets recur, and their PPR
 neighborhoods are deterministic in ``(target, N, alpha, eps)`` — so the
 push result is cached under exactly that key. Entries for targets in the
 pinned hot set never evict; everything else is LRU over ``capacity``
-entries. ``invalidate(vertices)`` drops every cached neighborhood that
-contains an updated vertex (a graph update at v changes the PPR of any
-target whose neighborhood reaches v), forcing recompute on next lookup.
+entries. ``invalidate(vertices)`` drops every cached neighborhood whose
+push FRONTIER (the full touched set, cached alongside the truncated
+top-N selection) contains an updated vertex — a graph update at v
+changes the PPR of any target whose push reached v, even when v fell
+below that target's top-N cutoff — forcing recompute on next lookup.
 
 Thread-safe: the engine's prepare runs on the scheduler's host pool, so
 several batches may probe the cache concurrently. Two concurrent misses on
@@ -64,69 +66,78 @@ class NeighborhoodCache:
     # -- core ----------------------------------------------------------------
     def get(self, key: Key) -> Optional[np.ndarray]:
         with self._lock:
-            nl = self._pinned.get(key)
-            if nl is None:
-                nl = self._lru.get(key)
-                if nl is not None:
+            ent = self._pinned.get(key)
+            if ent is None:
+                ent = self._lru.get(key)
+                if ent is not None:
                     self._lru.move_to_end(key)
-            if nl is None:
+            if ent is None:
                 self.misses += 1
                 return None
             self.hits += 1
-            return nl
+            return ent[0]
 
     def put(self, key: Key, node_list: np.ndarray,
-            generation: Optional[int] = None):
+            generation: Optional[int] = None,
+            frontier: Optional[np.ndarray] = None):
         """Insert a computed neighborhood. Pass the ``generation`` read
         BEFORE the computation started: if an invalidate() ran in between,
         the result may reflect the pre-update graph and is dropped (the
-        next lookup recomputes)."""
+        next lookup recomputes). ``frontier`` is the push's full touched
+        set (``select_important(with_frontier=True)``): with it,
+        invalidation is EXACT; without it, invalidation falls back to
+        scanning the truncated top-N list (approximate — updates at
+        below-cutoff touched vertices go undetected)."""
         nl = np.array(node_list)              # copy: freezing an aliased
         nl.flags.writeable = False            # array would make the
         # caller's own node list read-only as a side effect
+        if frontier is not None:
+            frontier = np.array(frontier)
+            frontier.flags.writeable = False
+        ent = (nl, frontier)
         with self._lock:
             if generation is not None and generation != self._gen:
                 return
             if key[0] in self._pin_ids:
-                self._pinned[key] = nl
+                self._pinned[key] = ent
                 return
-            self._lru[key] = nl
+            self._lru[key] = ent
             self._lru.move_to_end(key)
             while len(self._lru) > self.capacity:
                 self._lru.popitem(last=False)
                 self.evictions += 1
 
     def invalidate(self, vertices) -> int:
-        """Drop every cached neighborhood whose SELECTED top-N list
-        contains any of ``vertices`` (pinned entries included). Returns
-        the number of entries dropped.
+        """Drop every cached neighborhood whose push FRONTIER contains any
+        of ``vertices`` (pinned entries included). Returns the number of
+        entries dropped.
 
-        Approximation: cached values are the truncated top-N selection,
-        not the full PPR touched set — an update at a vertex that a
-        target's push reached but that fell below its top-N cutoff is not
-        detected, even though it could nudge that target's scores enough
-        to change its true top-N. Callers applying large or structural
-        graph updates should ``clear()`` instead; exact invalidation
-        would require caching each push's full frontier (ROADMAP:
-        graph-update streaming)."""
+        Entries stored with their full touched set (the engine's miss
+        path caches it) are invalidated EXACTLY: an update at a vertex
+        the push reached — even one below the top-N cutoff — drops the
+        entry, because it can shift the target's scores enough to change
+        its true top-N. Entries without a frontier (direct put() callers)
+        fall back to scanning the truncated selection, the pre-frontier
+        approximation."""
         vs = as_vertex_ids(vertices)
-        # the O(entries * N) membership scan runs OUTSIDE the lock so
-        # concurrent serving-path get/put calls don't stall behind a
+        # the O(entries * frontier) membership scan runs OUTSIDE the lock
+        # so concurrent serving-path get/put calls don't stall behind a
         # graph update; the generation bump (taken first) keeps any
         # in-flight pre-update computation from landing afterwards
         with self._lock:
             self._gen += 1
             snapshot = [(store, list(store.items()))
                         for store in (self._pinned, self._lru)]
-        stale = [(store, k, nl) for store, items in snapshot
-                 for k, nl in items
-                 if np.isin(nl, vs, assume_unique=False).any()]
+        stale = [(store, k, ent) for store, items in snapshot
+                 for k, ent in items
+                 if np.isin(ent[1] if ent[1] is not None else ent[0], vs,
+                            assume_unique=False).any()]
         dropped = 0
         with self._lock:
-            for store, k, nl in stale:
+            for store, k, ent in stale:
                 # identity check: a fresh post-update recompute may have
                 # replaced the entry while we scanned — keep that one
-                if store.get(k) is nl:
+                if store.get(k) is ent:
                     del store[k]
                     dropped += 1
             self.invalidations += dropped

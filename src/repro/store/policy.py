@@ -9,6 +9,12 @@ and t_load (host->device feature shipping) is traded for memory:
              "resident" device feature store: rows pinned in device memory
                         at engine start; batches ship int32 slot maps plus
                         only the rows that miss the HBM budget partition
+             "sharded"  resident table partitioned across ``num_shards``
+                        shard tables (one per jax device when available),
+                        each under its own budget; batches ship per-shard
+                        slot lists + a reorder map, rows gather
+                        shard-locally, and ``repin()`` rebalances from
+                        observed PPR mass (store/sharded.py)
   nbr_cache: "none"     re-run PPR local push per target every batch
              "lru"      LRU cache of per-target PPR node lists
              "pinned"   LRU plus a never-evicted hot set (top-degree
@@ -19,8 +25,9 @@ from __future__ import annotations
 from dataclasses import dataclass, field
 from typing import Optional, Tuple
 
-FEATURE_MODES = ("dense", "packed", "resident")
+FEATURE_MODES = ("dense", "packed", "resident", "sharded")
 NBR_CACHE_MODES = ("none", "lru", "pinned")
+PLACEMENT_MODES = ("hash", "range")
 
 
 @dataclass(frozen=True)
@@ -32,6 +39,13 @@ class StorePolicy:
     # mass; None = vertex degree); compare=False keeps the frozen
     # dataclass's ==/hash usable when an ndarray is supplied
     hot_scores: Optional[object] = field(default=None, compare=False)
+    # sharded-store knobs (features="sharded" only)
+    num_shards: int = 0                      # logical shards (>= 1)
+    placement: str = "hash"                  # hash | range (degree bands)
+    # per-shard HBM budget: None = whole matrix split across shards, an
+    # int applies to every shard, a tuple gives uneven per-shard budgets
+    shard_budget_bytes: Optional[object] = field(default=None,
+                                                 compare=False)
     nbr_cache: str = "none"
     nbr_capacity: int = 4096                 # LRU entries (excludes pins)
     pinned_targets: Optional[Tuple[int, ...]] = None
@@ -44,6 +58,9 @@ class StorePolicy:
         if self.nbr_cache not in NBR_CACHE_MODES:
             raise ValueError(f"nbr_cache={self.nbr_cache!r}, "
                              f"expected one of {NBR_CACHE_MODES}")
+        if self.placement not in PLACEMENT_MODES:
+            raise ValueError(f"placement={self.placement!r}, "
+                             f"expected one of {PLACEMENT_MODES}")
         if self.nbr_capacity < 1:
             raise ValueError("nbr_capacity must be >= 1")
         if self.pinned_count < 0:
@@ -52,11 +69,20 @@ class StorePolicy:
                 and self.nbr_cache != "pinned":
             raise ValueError("pinned_targets/pinned_count require "
                              "nbr_cache='pinned'")
-        if (self.hbm_budget_bytes is not None
-                or self.hot_scores is not None) \
+        if self.hbm_budget_bytes is not None \
                 and self.features != "resident":
-            raise ValueError("hbm_budget_bytes/hot_scores require "
-                             "features='resident'")
+            raise ValueError("hbm_budget_bytes requires features='resident'"
+                             " (sharded stores use shard_budget_bytes)")
+        if self.hot_scores is not None \
+                and self.features not in ("resident", "sharded"):
+            raise ValueError("hot_scores require features='resident' "
+                             "or 'sharded'")
+        if self.features == "sharded":
+            if self.num_shards < 1:
+                raise ValueError("features='sharded' needs num_shards >= 1")
+        elif self.num_shards or self.shard_budget_bytes is not None:
+            raise ValueError("num_shards/shard_budget_bytes require "
+                             "features='sharded'")
 
     def describe(self) -> dict:
         if self.pinned_targets is not None:
@@ -67,8 +93,14 @@ class StorePolicy:
             # the engine resolves "auto" to a concrete top-degree pin set
             # and overwrites this field in store_report()
             pins = "auto" if self.nbr_cache == "pinned" else 0
-        return {"features": self.features,
-                "hbm_budget_bytes": self.hbm_budget_bytes,
-                "nbr_cache": self.nbr_cache,
-                "nbr_capacity": self.nbr_capacity,
-                "pinned_count": pins}
+        d = {"features": self.features,
+             "hbm_budget_bytes": self.hbm_budget_bytes,
+             "nbr_cache": self.nbr_cache,
+             "nbr_capacity": self.nbr_capacity,
+             "pinned_count": pins}
+        if self.features == "sharded":
+            b = self.shard_budget_bytes
+            d.update(num_shards=self.num_shards, placement=self.placement,
+                     shard_budget_bytes=list(b) if b is not None
+                     and not isinstance(b, int) else b)
+        return d

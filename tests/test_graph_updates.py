@@ -104,3 +104,57 @@ class TestPostUpdateInference:
         np.testing.assert_allclose(post, want, rtol=1e-6, atol=1e-7)
         eng.close()
         fresh.close()
+
+
+class TestExactFrontierInvalidation:
+    """invalidate() is exact: the cache holds each push's FULL touched
+    set, so an update at a vertex the push reached but that fell below
+    the top-N cutoff still drops the entry (the pre-frontier
+    approximation missed exactly this case)."""
+
+    def _engine_with_frontier_gap(self):
+        """Engine + (target, frontier-only vertex): a vertex in the
+        push's touched set but NOT in the truncated top-N selection."""
+        from repro.core.ini import select_important
+        g = make_graph(v=200, seed=3)
+        n = 8                                      # tight cutoff
+        cfg = GNNConfig(kind="gcn", n_layers=2, receptive_field=n,
+                        f_in=g.feature_dim)
+        eng = DecoupledEngine(g, cfg, batch_size=4,
+                              store=StorePolicy(nbr_cache="lru",
+                                                nbr_capacity=64))
+        for t in range(40):
+            sel, frontier = select_important(g, t, n, cfg.ppr_alpha,
+                                             cfg.ppr_eps,
+                                             with_frontier=True)
+            below = np.setdiff1d(frontier, sel)
+            if len(below):
+                return eng, g, t, int(below[0]), sel
+        raise AssertionError("no target with touched set > top-N")
+
+    def test_update_below_cutoff_drops_entry(self):
+        eng, g, t, below_cutoff, sel = self._engine_with_frontier_gap()
+        targets = eng.pad_targets(np.array([t]))
+        eng.infer(targets, overlap=False)          # cache the push
+        assert below_cutoff not in sel             # the gap is real
+        dropped = eng.invalidate([below_cutoff])
+        assert dropped >= 1                        # exact: still detected
+        misses0 = eng.nbr_cache.misses
+        eng.infer(targets, overlap=False)
+        assert eng.nbr_cache.misses > misses0      # recomputed
+        eng.close()
+
+    def test_put_without_frontier_falls_back_to_selection(self):
+        from repro.store import NeighborhoodCache, nbr_key
+        c = NeighborhoodCache(capacity=4)
+        k = nbr_key(1, 8, 0.15, 1e-4)
+        c.put(k, np.array([1, 5]))                 # no frontier attached
+        assert c.invalidate([9]) == 0              # 9 not in selection
+        assert c.invalidate([5]) == 1              # selection still scanned
+
+    def test_frontier_scan_preferred_over_selection(self):
+        from repro.store import NeighborhoodCache, nbr_key
+        c = NeighborhoodCache(capacity=4)
+        k = nbr_key(1, 8, 0.15, 1e-4)
+        c.put(k, np.array([1, 5]), frontier=np.array([1, 5, 9]))
+        assert c.invalidate([9]) == 1              # frontier-only vertex

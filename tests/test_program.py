@@ -400,3 +400,82 @@ class TestSpecialize:
         with pytest.raises(ValueError, match="identity"):
             lower(GNNConfig(kind="idkind", n_layers=2,
                             receptive_field=N, f_in=8))
+
+
+# -- APPNP: propagation-only layer template ----------------------------------
+
+
+class TestAPPNP:
+    """APPNP stress-tests the op vocabulary: the inner section is
+    propagation-ONLY (Aggregate + teleport Residual, no Transform)."""
+
+    def _cfg(self, graph, n_layers=4):
+        return GNNConfig(kind="appnp", n_layers=n_layers,
+                         receptive_field=N, f_in=graph.feature_dim)
+
+    def test_registered_and_propagation_only_inner(self, graph):
+        assert "appnp" in registered_kinds()
+        prog = lower(self._cfg(graph))
+        assert not any(isinstance(op, Transform) for op in prog.inner)
+        assert any(isinstance(op, Aggregate) for op in prog.inner)
+        # layer0's MLP weight is the one the engine must row-pad
+        from repro.core.program import input_width_params
+        assert input_width_params(prog) == ("w",)
+
+    def test_matches_true_appnp_power_iteration(self, graph):
+        """Executor output == the ACTUAL APPNP recurrence: h0 = relu(X W
+        + b) masked, then K-1 steps of z = (1-a) A_hat z + a h0 (teleport
+        anchored at the layer-0 prediction, NOT the previous iterate),
+        then max readout."""
+        cfg = self._cfg(graph)
+        a = cfg.ppr_alpha
+        eng = DecoupledEngine(graph, cfg, batch_size=4)
+        targets = np.arange(4)
+        got = eng.infer(targets, overlap=False).embeddings
+        sb = build_batch(graph, targets, N, e_pad=eng.e_pad,
+                         num_threads=1)
+        p = eng.params
+        h0 = np.maximum(sb.feats @ np.asarray(p["layer0"]["w"])
+                        + np.asarray(p["layer0"]["b"]), 0.0)
+        h0 = h0 * sb.mask[..., None]
+        # init pins 1 + teleport == alpha (teleport stays learnable)
+        np.testing.assert_allclose(
+            1.0 + np.asarray(p["layers"]["teleport"]), a, rtol=1e-6)
+        z = h0
+        for _ in range(cfg.n_layers - 1):
+            z = (1 - a) * np.einsum("cij,cjf->cif", sb.adj, z) + a * h0
+        want = np.where(sb.mask[..., None] > 0, z, -1e30).max(axis=1)
+        np.testing.assert_allclose(got, want, rtol=1e-4, atol=1e-4)
+        eng.close()
+
+    def test_inner_aggregate_gets_own_mode_mux(self, graph):
+        cfg = self._cfg(graph)
+        _, dec = lower_and_specialize(cfg, force={"inner[0]": "sg"})
+        by_site = {d.site: d.mode for d in dec}
+        assert by_site["inner[0]"] == "sg"       # propagation goes sg
+        assert by_site["layer0[0]"] == "dense"   # the MLP stays systolic
+
+    def test_serves_under_shared_dse_plan(self, graph):
+        """One DSEPlan admits gcn + appnp; both serve concurrently."""
+        cfg = self._cfg(graph, n_layers=3)
+        base = GNNConfig(kind="gcn", n_layers=3, receptive_field=N,
+                         f_in=graph.feature_dim)
+        appnp = DecoupledEngine(graph, cfg, batch_size=4)
+        ref = DecoupledEngine(graph, base, batch_size=4)
+        srv = GNNServer(max_wait_s=0.01)
+        srv.register("appnp", appnp)
+        srv.register("gcn", ref)
+        assert plan_covers(srv.plan, cfg) == []
+        srv.start()
+        reqs = [srv.submit(i, model="appnp") for i in range(6)]
+        reqs += [srv.submit(i, model="gcn") for i in range(4)]
+        srv.drain(reqs, timeout=120)
+        srv.stop()
+        want = appnp.infer(np.arange(6), overlap=False).embeddings
+        got = np.stack([r.embedding for r in reqs[:6]])
+        np.testing.assert_allclose(got, want, rtol=1e-5, atol=1e-6)
+        ops = srv.report()["models"]["appnp"]["ack"]["ops"]
+        assert any(o["op"].startswith("Aggregate") for o in ops)
+        assert sum(o["op"].startswith("Transform") for o in ops) == 1
+        appnp.close()
+        ref.close()

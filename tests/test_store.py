@@ -271,6 +271,23 @@ class TestPartialResidencyStore:
         np.testing.assert_array_equal(payload["miss_feats"][0],
                                       graph.features[0])
 
+    def test_miss_block_ships_at_f_in_not_f_pad(self, graph):
+        """Per-batch transfer accounting counts ONLY the miss rows: the
+        miss block crosses the link at f_in and is padded to the
+        resident table's f_pad on the device, so bytes_shipped never
+        charges MXU pad columns (resident-table layout) to the batch."""
+        f_in = graph.feature_dim                  # 500
+        st = DeviceFeatureStore(graph, f_pad=512,
+                                budget_bytes=8 * 512 * 4)
+        nls = ini_batch(graph, [0, 1], 16, num_threads=1)
+        payload, _ = st.host_payload(nls, 16)
+        assert payload["miss_feats"].shape[1] == f_in
+        feats = np.asarray(st.device_feats(payload))
+        assert feats.shape == (2, 16, 512)        # padded device-side
+        np.testing.assert_array_equal(feats[0, 0, :f_in],
+                                      graph.features[nls[0][0]])
+        np.testing.assert_array_equal(feats[..., f_in:], 0.0)
+
     def test_hot_rows_selected_by_score(self, graph):
         score = np.zeros(graph.num_vertices)
         score[[3, 7]] = 1.0
