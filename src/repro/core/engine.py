@@ -1,23 +1,28 @@
 """Decoupled mini-batch GNN inference engine (paper Algorithm 2 + 3).
 
-Host side: INI (PPR local push) + induced-subgraph construction into
-fixed-shape padded batches. Device side: one jitted AckProgram per
-(model, N, C) — the model's registered lowering (core.program) executed
-through the ACK kernels with a PER-OP dense/scatter-gather mux (XLA or
-Pallas implementation) and the Readout. The fixed shapes are the
-decoupling dividend: ONE compiled program serves every batch — the
-paper's "single accelerator, no reconfiguration" property.
+Host side: a staged **BatchPlan pipeline** (core.batchplan) — Select (PPR
+neighborhoods via the nbr cache), Build (induced-subgraph rows via the
+subgraph-row cache), Pack (store payload + transfer accounting) — each a
+named stage the scheduler pipelines across consecutive batches. Device
+side: one jitted AckProgram per (model, N, C) — the model's registered
+lowering (core.program) executed through the ACK kernels with a PER-OP
+dense/scatter-gather mux (XLA or Pallas implementation) and the Readout.
+The fixed shapes are the decoupling dividend: ONE compiled program serves
+every batch — the paper's "single accelerator, no reconfiguration"
+property.
 
 ``DecoupledEngine.infer`` overlaps host preparation of batch i+1 with
 device execution of batch i via core.scheduler (paper Fig. 7). The engine
 owns ONE persistent ``PipelineScheduler`` for its whole lifetime — batch
-and streaming calls share its host pool, dispatcher, and cumulative stats,
-so serving never pays per-call pipeline construction.
+and streaming calls share its stage workers, dispatcher, and cumulative
+stats, so serving never pays per-call pipeline construction.
 """
 from __future__ import annotations
 
 import functools
+import threading
 import warnings
+from concurrent.futures import ThreadPoolExecutor
 from dataclasses import dataclass
 from typing import Dict, Optional
 
@@ -25,6 +30,8 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.core.batchplan import (BatchPlan, BuildStage, PackStage,
+                                  SelectStage)
 from repro.core.program import (ProgramDecision, execute,
                                 input_width_params, lower,
                                 required_adjacency, specialize)
@@ -35,7 +42,7 @@ from repro.gnn.model import GNNConfig, init_gnn
 from repro.graphs.csr import CSRGraph
 from repro.store import NeighborhoodCache, StorePolicy, build_feature_source
 from repro.store.feature_store import pad_feature_dim
-from repro.store.nbr_cache import nbr_key
+from repro.store.nbr_cache import SubgraphRowCache
 
 
 def _pad128(f: int) -> int:
@@ -114,10 +121,48 @@ class DecoupledEngine:
         self._infer = jax.jit(functools.partial(self._forward))
         self._fsource = build_feature_source(graph, store, self.f_pad)
         self.nbr_cache = self._build_nbr_cache(store)
+        # Build-stage subgraph-row cache ("auto": rows are cached whenever
+        # neighborhoods are — hot traffic that re-selects also re-builds).
+        # Unlike node lists, one entry is ~2N^2 floats + the edge arrays,
+        # so the default capacity is BYTE-bounded (subgraph_budget_bytes),
+        # not inherited from nbr_capacity alone.
+        if store.cache_subgraph_rows:
+            cap = store.subgraph_capacity
+            if cap is None:
+                entry = 2 * n * n * 4 + 2 * n * 4 + 4 * self.e_pad * 4
+                cap = max(1, min(store.nbr_capacity,
+                                 store.subgraph_budget_bytes // entry))
+            self.sg_cache = SubgraphRowCache(cap)
+        else:
+            self.sg_cache = None
+        # the host side as an explicit staged pipeline (Select -> Build ->
+        # Pack, see core.batchplan); prepare() runs the same stages
+        # serially, so the staged path is the monolithic one by
+        # construction
+        self.stages = [SelectStage(self), BuildStage(self),
+                       PackStage(self)]
+        # auto-repin trigger state (StorePolicy.repin_every / _hit_floor)
+        self._repin_auto = bool(store.repin_every or store.repin_hit_floor)
+        self._repin_lock = threading.Lock()
+        self._repin_batches = 0
+        self._repin_base = (0, 0)       # (lookups, resident) at last repin
+        # floor-trigger backoff: when the hit rate stays below the floor
+        # even after a repin (working set > budget), checks space out
+        # exponentially instead of rebuilding the table every batch
+        self._floor_batches = 0
+        self._floor_wait = 1
+        # repins execute on their own single worker — NEVER on the
+        # scheduler's dispatcher thread, where a table rebuild would
+        # stall completion of every in-flight batch
+        self._repin_pool = ThreadPoolExecutor(
+            max_workers=1, thread_name_prefix="repin") \
+            if self._repin_auto else None
+        self.auto_repins = 0
         # one pipeline per deployment (paper: one accelerator config, no
         # per-batch reconfiguration); lazily started on first use
-        self.scheduler = PipelineScheduler(self.prepare, self.run_device,
-                                           depth=3)
+        self.scheduler = PipelineScheduler(
+            self.stages, self.run_device, depth=3,
+            on_batch=self._on_batch_done if self._repin_auto else None)
         # graph-update streaming: CSRGraph.apply_edge_updates notifies us
         # so cached neighborhoods / resident rows never serve stale state
         if hasattr(graph, "register_listener"):
@@ -153,66 +198,31 @@ class DecoupledEngine:
 
     def _node_lists(self, targets):
         """PPR neighborhoods for a batch, via the neighborhood cache when
-        the policy has one. Returns (node_lists, hits, misses) counted
-        over the batch's UNIQUE targets — duplicates collapse into one
-        count, so tail padding (pad_targets repeats the last target)
-        cannot inflate the hit rate with synthetic traffic."""
-        from repro.core.ini import ini_batch
-        cfg = self.cfg
-        n, a, e = cfg.receptive_field, cfg.ppr_alpha, cfg.ppr_eps
-        targets = [int(t) for t in targets]
-        if self.nbr_cache is None:
-            return (ini_batch(self.graph, targets, n, a, e,
-                              self.num_threads), 0, 0)
-        found, missing = {}, []
-        for t in dict.fromkeys(targets):          # unique, order-kept
-            nl = self.nbr_cache.get(nbr_key(t, n, a, e))
-            if nl is None:
-                missing.append(t)
-            else:
-                found[t] = nl
-        if missing:
-            gen = self.nbr_cache.generation   # pre-computation epoch: an
-            # invalidate() landing mid-push makes put() drop the result
-            computed = ini_batch(self.graph, missing, n, a, e,
-                                 self.num_threads, with_frontier=True)
-            for t, (nl, frontier) in zip(missing, computed):
-                # the full touched set rides along so invalidate() is
-                # exact (an update below the top-N cutoff still drops us)
-                self.nbr_cache.put(nbr_key(t, n, a, e), nl,
-                                   generation=gen, frontier=frontier)
-                found[t] = nl
-        return ([found[t] for t in targets],
-                len(found) - len(missing), len(missing))
+        the policy has one — the Select stage's back-compat spelling.
+        Returns (node_lists, hits, misses) counted over the batch's
+        UNIQUE targets."""
+        plan = self.stages[0].run(BatchPlan(targets=np.asarray(targets)))
+        return plan.node_lists, plan.nbr_hits, plan.nbr_misses
+
+    def plan(self, targets) -> BatchPlan:
+        """Run the host pipeline's stages back-to-back on the caller
+        thread and return the full BatchPlan artifact (the staged
+        decomposition of the old monolithic prepare()).
+
+        Note: for resident/sharded stores the packed payload PINS the
+        store's current residency generation until it is consumed by
+        ``run_device`` (that is what keeps in-flight batches coherent
+        across ``repin()``) — feed ``plan.device`` to ``run_device`` or
+        avoid repinning while holding abandoned plans."""
+        plan = BatchPlan(targets=np.asarray(targets))
+        for stage in self.stages:
+            plan = stage.run(plan)
+        return plan
 
     def prepare(self, targets) -> Dict[str, np.ndarray]:
-        from repro.core.subgraph import batch_from_node_lists
-        node_lists, hits, misses = self._node_lists(targets)
-        src = self._fsource
-        sb = batch_from_node_lists(self.graph, targets, node_lists,
-                                   self.cfg.receptive_field, self.e_pad,
-                                   build_feats=src.needs_host_feats)
-        d = self.device_batch(sb, include_feats=False)
-        payload, dedup = src.host_payload(
-            node_lists, self.cfg.receptive_field,
-            sb.feats if src.needs_host_feats else None)
-        if dedup is not None:
-            self.last_dedup_ratio = dedup
-        # transfer accounting: what this strategy ships vs. what the dense
-        # baseline would (non-feature arrays + a full [C, N, f_pad] block)
-        other = sum(int(a.nbytes) for a in d.values())
-        shipped = other + sum(int(a.nbytes) for a in payload.values())
-        dense = other + len(node_lists) * self.cfg.receptive_field \
-            * self.f_pad * 4
-        d.update(payload)
-        # sharded store: per-shard share of this payload's bytes (pure
-        # function of the payload — safe from concurrent prepare threads)
-        per_shard = getattr(src, "shard_metrics_for", None)
-        self.scheduler.note_host_metrics(
-            bytes_shipped=shipped, bytes_dense=dense, cache_hits=hits,
-            cache_misses=misses, dedup_ratio=dedup,
-            shard_bytes=per_shard(payload) if per_shard else None)
-        return d
+        """Monolithic host prep (all stages serially): the one-call
+        spelling of the staged pipeline, bitwise-identical to it."""
+        return self.plan(targets).device
 
     def device_batch(self, sb: SubgraphBatch,
                      include_feats: bool = True) -> Dict[str, np.ndarray]:
@@ -222,19 +232,32 @@ class DecoupledEngine:
         if include_feats:
             d["feats"] = self._pad_feature_dim(sb.feats)
         if self.needs_edges:
-            n = sb.n
-            self_w = sb.adj[:, np.arange(n), np.arange(n)]
-            indeg = np.einsum("cij->ci", (sb.adj_mean > 0).astype(np.float32))
-            d.update(edge_src=sb.edge_src, edge_dst=sb.edge_dst,
-                     edge_w=sb.edge_w, self_w=self_w.astype(np.float32))
-            valid = sb.edge_w != 0
-            dst_deg = np.take_along_axis(
-                np.maximum(indeg, 1.0), sb.edge_dst.astype(np.int64), axis=1)
-            d["edge_w_mean"] = np.where(valid, 1.0 / dst_deg, 0.0
-                                        ).astype(np.float32)
+            if sb.self_w is not None and sb.edge_w_mean is not None:
+                # Build-stage extras, computed from the CSR edge lists
+                d.update(edge_src=sb.edge_src, edge_dst=sb.edge_dst,
+                         edge_w=sb.edge_w, self_w=sb.self_w,
+                         edge_w_mean=sb.edge_w_mean)
+            else:
+                # externally constructed batch without the carried
+                # extras: recover them from the dense adjacency
+                n = sb.n
+                self_w = sb.adj[:, np.arange(n), np.arange(n)]
+                indeg = np.einsum("cij->ci",
+                                  (sb.adj_mean > 0).astype(np.float32))
+                d.update(edge_src=sb.edge_src, edge_dst=sb.edge_dst,
+                         edge_w=sb.edge_w,
+                         self_w=self_w.astype(np.float32))
+                valid = sb.edge_w != 0
+                dst_deg = np.take_along_axis(
+                    np.maximum(indeg, 1.0), sb.edge_dst.astype(np.int64),
+                    axis=1)
+                d["edge_w_mean"] = np.where(valid, 1.0 / dst_deg, 0.0
+                                            ).astype(np.float32)
         return d
 
     def run_device(self, device_batch) -> jax.Array:
+        if isinstance(device_batch, BatchPlan):   # staged pipeline output
+            device_batch = device_batch.device
         db = dict(device_batch)
         src = self._fsource
         if all(k in db for k in src.payload_keys):
@@ -278,29 +301,83 @@ class DecoupledEngine:
 
     # -- store hooks ---------------------------------------------------------
     def invalidate(self, vertices) -> int:
-        """Graph-update hook, both store levels: drop every cached
-        neighborhood whose push FRONTIER contains any of ``vertices``
-        (exact — the miss path caches each push's full touched set, see
-        NeighborhoodCache.invalidate), and re-upload those vertices'
-        device-resident feature rows from ``graph.features`` (so feature
-        mutations take effect without an engine rebuild). Returns the
-        number of cache entries dropped."""
+        """Graph-update hook, every cache level: drop every cached
+        neighborhood AND every cached subgraph row whose push FRONTIER
+        contains any of ``vertices`` (exact — the miss path caches each
+        push's full touched set, see FrontierCache.invalidate), and
+        re-upload those vertices' device-resident feature rows from
+        ``graph.features`` (so feature mutations take effect without an
+        engine rebuild). Returns the number of NEIGHBORHOOD entries
+        dropped (row-cache drops are visible in store_report())."""
         if hasattr(self._fsource, "refresh_features"):
             self._fsource.refresh_features(vertices)
+        if self.sg_cache is not None:
+            self.sg_cache.invalidate(vertices)
         if self.nbr_cache is None:
             return 0
         return self.nbr_cache.invalidate(vertices)
 
+    def _on_batch_done(self, ticket=None):
+        """Pipeline completion hook: evaluate the policy's automatic
+        repin triggers and hand the rebalance to the engine's single
+        repin worker — the completion path itself stays light (the
+        scheduler's contract), and in-flight batches keep their residency
+        snapshot (the payload carries its generation), so a repin landing
+        mid-stream never corrupts them.
+
+        The hit-floor trigger backs off exponentially while the rate
+        stays below the floor (a working set larger than the budget can
+        NEVER satisfy it — without backoff every batch would pay a full
+        table rebuild) and re-arms as soon as a check passes."""
+        pol = self.store_policy
+        src = self._fsource
+        with self._repin_lock:
+            self._repin_batches += 1
+            self._floor_batches += 1
+            due = bool(pol.repin_every
+                       and self._repin_batches >= pol.repin_every)
+            if not due and pol.repin_hit_floor \
+                    and self._floor_batches >= self._floor_wait:
+                lk = getattr(src, "lookups", 0) - self._repin_base[0]
+                res = getattr(src, "resident_lookups", 0) \
+                    - self._repin_base[1]
+                self._floor_batches = 0
+                if lk > 0 and (res / lk) < pol.repin_hit_floor:
+                    due = True
+                    self._floor_wait = min(64, self._floor_wait * 2)
+                else:
+                    self._floor_wait = 1
+            if not due:
+                return
+            self._repin_batches = 0
+            self._repin_base = (getattr(src, "lookups", 0),
+                                getattr(src, "resident_lookups", 0))
+            self.auto_repins += 1
+        self._repin_pool.submit(self._auto_repin_job)
+
+    def _auto_repin_job(self):
+        try:
+            self.repin()
+        except Exception:            # a failed rebalance must not kill
+            pass                     # the worker (serving is unaffected)
+
+    def drain_repins(self, timeout: Optional[float] = 60.0):
+        """Block until every triggered auto-repin has executed (tests /
+        orderly shutdown; serving never needs this)."""
+        if self._repin_pool is not None:
+            self._repin_pool.submit(lambda: None).result(timeout)
+
     def repin(self, **kwargs) -> dict:
-        """Online residency rebalance (sharded store only): re-derive the
-        shard-resident set from the PPR mass observed since start — hot
-        cold-rows promote, dead resident rows demote, skewed shards even
-        out. In-flight batches keep their placement snapshot (the payload
-        carries its generation), so serving never pauses."""
+        """Online residency rebalance (resident + sharded stores):
+        re-derive the device-resident set from the PPR mass observed
+        since start — hot cold-rows promote, dead resident rows demote
+        (and, sharded, skewed shards even out). In-flight batches keep
+        their residency snapshot (the payload carries its generation), so
+        serving never pauses."""
         if not hasattr(self._fsource, "repin"):
             raise ValueError(
                 f"store strategy {self._fsource.name!r} has no repin(); "
-                "use StorePolicy(features='sharded', ...)")
+                "use StorePolicy(features='resident' | 'sharded', ...)")
         return self._fsource.repin(**kwargs)
 
     def store_report(self) -> dict:
@@ -313,12 +390,20 @@ class DecoupledEngine:
         r = {"policy": pol, "features": self._fsource.report()}
         if self.nbr_cache is not None:
             r["nbr_cache"] = self.nbr_cache.stats()
+        if self.sg_cache is not None:
+            r["subgraph_cache"] = self.sg_cache.stats()
+        if self._repin_auto:
+            r["auto_repins"] = self.auto_repins
         return r
 
     def close(self):
         if hasattr(self.graph, "unregister_listener"):
             self.graph.unregister_listener(self.invalidate)
         self.scheduler.close()
+        if self._repin_pool is not None:
+            self._repin_pool.shutdown(wait=True)
+        for stage in self.stages:
+            stage.close()
 
     def __enter__(self) -> "DecoupledEngine":
         return self

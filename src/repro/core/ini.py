@@ -12,8 +12,8 @@ Also provides the dense power-iteration PPR oracle used by tests.
 """
 from __future__ import annotations
 
-from concurrent.futures import ThreadPoolExecutor
-from typing import List, Tuple
+from concurrent.futures import Executor, ThreadPoolExecutor
+from typing import List, Optional, Tuple
 
 import numpy as np
 
@@ -105,13 +105,18 @@ def select_important(g: CSRGraph, target: int, n: int, alpha: float = 0.15,
 
 def ini_batch(g: CSRGraph, targets, n: int, alpha: float = 0.15,
               eps: float = 1e-4, num_threads: int = 8,
-              with_frontier: bool = False) -> List[np.ndarray]:
+              with_frontier: bool = False,
+              executor: Optional[Executor] = None) -> List[np.ndarray]:
     """INI for a batch of targets on a host thread pool (paper: 8 threads).
 
     ``with_frontier=True`` returns ``(node_list, touched_set)`` pairs —
-    see ``select_important``."""
+    see ``select_important``. Pass a persistent ``executor`` to amortize
+    pool construction across batches (the Select stage owns one for its
+    engine's lifetime); without one, a pool is built per call."""
     def one(t):
         return select_important(g, int(t), n, alpha, eps, with_frontier)
+    if executor is not None and len(targets) > 1:
+        return list(executor.map(one, targets))
     if num_threads <= 1 or len(targets) <= 1:
         return [one(t) for t in targets]
     with ThreadPoolExecutor(max_workers=num_threads) as ex:

@@ -2,18 +2,26 @@
 
 The paper overlaps, per PE: (a) CPU-side INI + subgraph build, (b) PCIe
 transfer into on-chip buffers (triple-buffered), (c) accelerator compute.
-Here (a) runs on a host thread pool ``depth`` batches ahead (the triple
-buffer), (b) is ``jax.device_put`` async H2D, and (c) is the jitted engine
-program — JAX's async dispatch naturally pipelines (b)/(c) while the pool
+Here (a) runs on host threads ``depth`` batches ahead (the triple buffer),
+(b) is ``jax.device_put`` async H2D, and (c) is the jitted engine program —
+JAX's async dispatch naturally pipelines (b)/(c) while the host side
 pipelines (a).
+
+The host side is either ONE opaque ``host_fn`` (the back-compat one-stage
+spelling, run on a ``depth``-worker pool) or a sequence of named STAGES
+(``core.batchplan.PlanStage``): each stage gets its own worker station and
+batches flow through them in order, so stage i of batch k overlaps stage
+i+1 of batch k-1 — a slow Select (PPR miss) on one batch no longer stalls
+the Build/Pack of the batches behind it, and every stage's wall time is
+visible in ``SchedulerStats.stage_times`` (a software Fig. 3 breakdown).
 
 ``PipelineScheduler`` is a *persistent streaming* pipeline: construct it
 once per deployment, then ``submit()`` micro-batches as they arrive (a
 long-lived server) or ``run()`` a list of them (offline inference). Both
-entry points share the same host pool, dispatcher thread, and cumulative
-``SchedulerStats`` — nothing is rebuilt per call, which is the paper's
-"single accelerator configuration, no reconfiguration between batches"
-property at the software layer.
+entry points share the same stage workers, dispatcher thread, and
+cumulative ``SchedulerStats`` — nothing is rebuilt per call, which is the
+paper's "single accelerator configuration, no reconfiguration between
+batches" property at the software layer.
 
 ``SchedulerStats`` reports the paper's §5.4 quantities: t_initialization
 (first-batch host latency, the un-hideable prologue), per-stage sums, and
@@ -24,9 +32,9 @@ from __future__ import annotations
 import queue
 import threading
 import time
-from concurrent.futures import ThreadPoolExecutor
+from concurrent.futures import Future, ThreadPoolExecutor
 from dataclasses import dataclass, field
-from typing import Any, Callable, List, Optional, Sequence
+from typing import Any, Callable, Dict, List, Optional, Sequence, Union
 
 import jax
 
@@ -40,14 +48,21 @@ class SchedulerStats:
     n_batches: int = 0
     host_times: List[float] = field(default_factory=list)
     device_times: List[float] = field(default_factory=list)
+    # per-stage host wall time totals (staged pipelines only; the
+    # one-stage host_fn spelling accumulates under "host") — the paper's
+    # Fig. 3 breakdown of the host budget
+    stage_times: Dict[str, float] = field(default_factory=dict)
     # host->device transfer accounting (the paper's t_load, Eq. 2): what
     # actually crossed the link vs. what the dense baseline would ship,
-    # plus the store's neighborhood-cache outcome — fed by the host_fn
+    # plus the store's neighborhood-cache outcome — fed by the host side
     # via ``PipelineScheduler.note_host_metrics``.
     bytes_shipped: int = 0
     bytes_dense: int = 0
     cache_hits: int = 0
     cache_misses: int = 0
+    # Build-stage subgraph-row cache outcome (staged pipelines only)
+    build_hits: int = 0
+    build_misses: int = 0
     last_dedup_ratio: Optional[float] = None
     # sharded feature store only: cumulative host->device bytes PER SHARD
     # (empty for unsharded deployments)
@@ -67,6 +82,12 @@ class SchedulerStats:
     def cache_hit_rate(self) -> float:
         total = self.cache_hits + self.cache_misses
         return self.cache_hits / total if total else 0.0
+
+    @property
+    def build_hit_rate(self) -> float:
+        """Subgraph-row cache hit rate (Build stage skipped on a hit)."""
+        total = self.build_hits + self.build_misses
+        return self.build_hits / total if total else 0.0
 
     @property
     def transfer_ratio(self) -> float:
@@ -92,7 +113,11 @@ class SchedulerStats:
              "bytes_shipped": self.bytes_shipped,
              "transfer_ratio": round(self.transfer_ratio, 4),
              "cache_hit_rate": round(self.cache_hit_rate, 4),
+             "build_hit_rate": round(self.build_hit_rate, 4),
              "dedup_ratio": self.last_dedup_ratio}
+        if self.stage_times:
+            d["stages"] = {k: round(v, 6)
+                           for k, v in self.stage_times.items()}
         if self.shard_bytes:
             d["shard_bytes"] = list(self.shard_bytes)
             d["shard_balance"] = round(self.shard_balance, 4)
@@ -107,17 +132,22 @@ class SchedulerStats:
         self.t_device_total += t_device
         self.n_batches += 1
 
+    def merge_stage_times(self, stage_times: Dict[str, float]):
+        for k, v in stage_times.items():
+            self.stage_times[k] = self.stage_times.get(k, 0.0) + v
+
 
 class StreamTicket:
     """Handle for one in-flight micro-batch: resolves to the device output.
 
-    ``t_host``/``t_device`` carry the per-stage timings once done;
-    ``on_done(ticket)`` (if given) fires on the dispatcher thread — keep it
-    light (recording latencies, handing results to waiters).
+    ``t_host``/``t_device`` carry the per-stage timings once done
+    (``stage_times`` the named host-stage split); ``on_done(ticket)`` (if
+    given) fires on the dispatcher thread — keep it light (recording
+    latencies, handing results to waiters).
     """
 
     __slots__ = ("item", "seq", "on_done", "t_submit", "t_host", "t_device",
-                 "output", "error", "_event", "_host_future")
+                 "stage_times", "output", "error", "_event", "_host_future")
 
     def __init__(self, item: Any, seq: int,
                  on_done: Optional[Callable] = None):
@@ -127,6 +157,7 @@ class StreamTicket:
         self.t_submit = time.perf_counter()
         self.t_host = 0.0
         self.t_device = 0.0
+        self.stage_times: Dict[str, float] = {}
         self.output: Any = None
         self.error: Optional[BaseException] = None
         self._event = threading.Event()
@@ -149,24 +180,43 @@ _SHUTDOWN = object()
 class PipelineScheduler:
     """Persistent double/triple-buffered host->device streaming pipeline.
 
-    host_fn(item)   -> host batch (numpy dict), CPU-bound
+    host            -> either ``host_fn(item) -> host batch`` (one-stage
+                      back-compat spelling, run on a ``depth``-worker
+                      pool) or a sequence of ``PlanStage`` objects, each
+                      run on its own worker station so consecutive
+                      batches pipeline through the stages
     device_fn(batch)-> device array(s); device work is async-dispatched
     depth           -> how many batches the host runs ahead (2 = double
-                      buffering, 3 = the paper's triple buffering)
+                      buffering, 3 = the paper's triple buffering); in
+                      staged mode the stage stations bound it instead
     max_inflight    -> bound on submitted-but-incomplete batches;
                       ``submit()`` blocks past it (backpressure), default
                       2 * depth.
+    on_batch        -> optional ``on_batch(ticket)`` completion hook,
+                      fired on the dispatcher thread after stats are
+                      recorded (the engine's auto-repin trigger point);
+                      exceptions are swallowed.
 
     Lifecycle: lazily started on first submit/run; ``close()`` drains and
-    tears down threads. ``self.stats`` accumulates over the scheduler's
+    tears down threads (stage objects themselves are owned — and closed —
+    by their engine). ``self.stats`` accumulates over the scheduler's
     whole lifetime; ``run()`` additionally returns call-local stats.
     """
 
-    def __init__(self, host_fn: Callable, device_fn: Callable,
-                 depth: int = 3, max_inflight: Optional[int] = None):
-        self.host_fn, self.device_fn = host_fn, device_fn
+    def __init__(self, host: Union[Callable, Sequence],
+                 device_fn: Callable, depth: int = 3,
+                 max_inflight: Optional[int] = None,
+                 on_batch: Optional[Callable] = None):
+        if callable(host):
+            self.host_fn, self.stages = host, None
+        else:
+            self.host_fn, self.stages = None, list(host)
+            if not self.stages:
+                raise ValueError("empty stage sequence")
+        self.device_fn = device_fn
         self.depth = max(1, depth)
         self.max_inflight = max_inflight or 2 * self.depth
+        self.on_batch = on_batch
         self.stats = SchedulerStats()
         self._lock = threading.Lock()
         self._idle = threading.Condition(self._lock)
@@ -176,6 +226,7 @@ class PipelineScheduler:
         self._active_since: Optional[float] = None
         self._seq = 0
         self._pool: Optional[ThreadPoolExecutor] = None
+        self._stage_pools: Optional[List[ThreadPoolExecutor]] = None
         self._dispatcher: Optional[threading.Thread] = None
         self._closed = False
 
@@ -184,14 +235,28 @@ class PipelineScheduler:
     def started(self) -> bool:
         return self._dispatcher is not None
 
+    @property
+    def stage_names(self) -> List[str]:
+        return [st.name for st in self.stages] if self.stages else ["host"]
+
     def start(self) -> "PipelineScheduler":
         with self._lock:
             if self._closed:
                 raise RuntimeError("scheduler is closed")
             if self._dispatcher is not None:
                 return self
-            self._pool = ThreadPoolExecutor(
-                max_workers=self.depth, thread_name_prefix="sched-host")
+            if self.stages is None:
+                self._pool = ThreadPoolExecutor(
+                    max_workers=self.depth, thread_name_prefix="sched-host")
+            else:
+                # one worker station per stage: batches flow through in
+                # submission order, consecutive batches occupy adjacent
+                # stages (the paper's Fig. 7 pipelining, host-side)
+                self._stage_pools = [
+                    ThreadPoolExecutor(
+                        max_workers=max(1, getattr(st, "workers", 1)),
+                        thread_name_prefix=f"sched-{st.name}")
+                    for st in self.stages]
             self._dispatcher = threading.Thread(
                 target=self._dispatch_loop, name="sched-dispatch",
                 daemon=True)
@@ -206,7 +271,10 @@ class PipelineScheduler:
         self._closed = True
         self._order_q.put(_SHUTDOWN)
         self._dispatcher.join(timeout=10)
-        self._pool.shutdown(wait=True)
+        if self._pool is not None:
+            self._pool.shutdown(wait=True)
+        for p in self._stage_pools or ():
+            p.shutdown(wait=True)
         # a submit() that raced past the closed-check may have enqueued
         # after _SHUTDOWN; fail its ticket rather than hang its waiter
         while True:
@@ -217,6 +285,65 @@ class PipelineScheduler:
             if t is not _SHUTDOWN:
                 t.error = RuntimeError("scheduler closed before dispatch")
                 self._complete(t)
+
+    # -- host execution ------------------------------------------------------
+    def _timed_host(self, ticket: StreamTicket):
+        t = time.perf_counter()
+        hb = self.host_fn(ticket.item)
+        dt = time.perf_counter() - t
+        ticket.stage_times["host"] = dt
+        return hb, dt
+
+    def _host_serial(self, item, stage_times: Optional[Dict] = None):
+        """Run the full host side inline (run()'s no-overlap path)."""
+        if self.stages is None:
+            t0 = time.perf_counter()
+            v = self.host_fn(item)
+            if stage_times is not None:
+                stage_times["host"] = stage_times.get("host", 0.0) \
+                    + time.perf_counter() - t0
+            return v
+        v = item
+        for st in self.stages:
+            t0 = time.perf_counter()
+            v = st.run(v)
+            if stage_times is not None:
+                stage_times[st.name] = stage_times.get(st.name, 0.0) \
+                    + time.perf_counter() - t0
+        return v
+
+    def _stage_step(self, ticket: StreamTicket, i: int, value):
+        st = self.stages[i]
+        t0 = time.perf_counter()
+        try:
+            out = st.run(value)
+        except BaseException as e:             # noqa: BLE001
+            ticket.stage_times[st.name] = \
+                ticket.stage_times.get(st.name, 0.0) \
+                + time.perf_counter() - t0
+            ticket._host_future.set_exception(e)
+            return
+        ticket.stage_times[st.name] = \
+            ticket.stage_times.get(st.name, 0.0) + time.perf_counter() - t0
+        if i + 1 < len(self.stages):
+            try:
+                self._stage_pools[i + 1].submit(self._stage_step, ticket,
+                                                i + 1, out)
+            except RuntimeError:               # racing close()
+                ticket._host_future.set_exception(
+                    RuntimeError("scheduler closed mid-pipeline"))
+        else:
+            ticket._host_future.set_result(
+                (out, sum(ticket.stage_times.values())))
+
+    def _submit_host(self, ticket: StreamTicket):
+        if self.stages is None:
+            ticket._host_future = self._pool.submit(self._timed_host,
+                                                    ticket)
+        else:
+            ticket._host_future = Future()
+            self._stage_pools[0].submit(self._stage_step, ticket, 0,
+                                        ticket.item)
 
     # -- streaming interface -------------------------------------------------
     def submit(self, item, on_done: Optional[Callable] = None
@@ -234,7 +361,7 @@ class PipelineScheduler:
                 self._active_since = time.perf_counter()
             self._inflight += 1
         try:
-            t._host_future = self._pool.submit(self._timed_host, item)
+            self._submit_host(t)
             self._order_q.put(t)
         except RuntimeError as e:    # pool shut down by a racing close()
             with self._idle:
@@ -248,21 +375,24 @@ class PipelineScheduler:
 
     def note_host_metrics(self, *, bytes_shipped: int = 0,
                           bytes_dense: int = 0, cache_hits: int = 0,
-                          cache_misses: int = 0,
+                          cache_misses: int = 0, build_hits: int = 0,
+                          build_misses: int = 0,
                           dedup_ratio: Optional[float] = None,
                           shard_bytes: Optional[Sequence[int]] = None):
         """Accumulate transfer/cache counters for one prepared batch.
 
-        Called by the host_fn itself (it alone knows what it shipped and
-        what the dense baseline would have been); safe from the host pool
-        threads and from run()'s serial path alike. ``shard_bytes`` (one
-        entry per feature-store shard) accumulates elementwise."""
+        Called by the host side itself (it alone knows what it shipped and
+        what the dense baseline would have been); safe from the stage
+        worker threads and from run()'s serial path alike. ``shard_bytes``
+        (one entry per feature-store shard) accumulates elementwise."""
         with self._lock:
             s = self.stats
             s.bytes_shipped += int(bytes_shipped)
             s.bytes_dense += int(bytes_dense)
             s.cache_hits += int(cache_hits)
             s.cache_misses += int(cache_misses)
+            s.build_hits += int(build_hits)
+            s.build_misses += int(build_misses)
             if dedup_ratio is not None:
                 s.last_dedup_ratio = float(dedup_ratio)
             if shard_bytes is not None:
@@ -279,19 +409,20 @@ class PipelineScheduler:
                                        timeout=timeout):
                 raise TimeoutError("scheduler flush timed out")
 
-    def _timed_host(self, item):
-        t = time.perf_counter()
-        hb = self.host_fn(item)
-        return hb, time.perf_counter() - t
-
     def _complete(self, ticket: StreamTicket):
         with self._lock:             # same lock as run()'s serial recorder
             self.stats.record(ticket.t_host, ticket.t_device)
+            self.stats.merge_stage_times(ticket.stage_times)
         ticket._event.set()          # resolve BEFORE on_done: callbacks may
         if ticket.on_done is not None:           # call ticket.result()
             try:
                 ticket.on_done(ticket)
             except Exception:        # callback errors must not kill pipeline
+                pass
+        if self.on_batch is not None:
+            try:                     # completion hook (e.g. auto-repin) —
+                self.on_batch(ticket)            # never kills the pipeline
+            except Exception:
                 pass
         # in-flight accounting last, so flush() implies callbacks finished
         with self._idle:
@@ -361,13 +492,15 @@ class PipelineScheduler:
         call = SchedulerStats(n_batches=len(items))
         with self._lock:       # store-metric baseline for call-local delta
             base = (self.stats.bytes_shipped, self.stats.bytes_dense,
-                    self.stats.cache_hits, self.stats.cache_misses)
+                    self.stats.cache_hits, self.stats.cache_misses,
+                    self.stats.build_hits, self.stats.build_misses)
         t0 = time.perf_counter()
         if not overlap or self.depth == 1:
             outs = []
             for it in items:
+                st_times: Dict[str, float] = {}
                 th = time.perf_counter()
-                hb = self.host_fn(it)
+                hb = self._host_serial(it, st_times)
                 th = time.perf_counter() - th
                 td = time.perf_counter()
                 out = self.device_fn(hb)
@@ -375,15 +508,24 @@ class PipelineScheduler:
                 td = time.perf_counter() - td
                 call.host_times.append(th)
                 call.device_times.append(td)
+                call.merge_stage_times(st_times)
                 with self._lock:
                     self.stats.record(th, td)
+                    self.stats.merge_stage_times(st_times)
                     self.stats.t_wall += th + td
+                if self.on_batch is not None:
+                    try:             # completion hook fires on the serial
+                        self.on_batch(None)      # path too (no ticket)
+                    except Exception:
+                        pass
                 outs.append(out)
         else:
             tickets = [self.submit(it) for it in items]
             outs = [t.result() for t in tickets]
             call.host_times = [t.t_host for t in tickets]
             call.device_times = [t.t_device for t in tickets]
+            for t in tickets:
+                call.merge_stage_times(t.stage_times)
         call.t_wall = time.perf_counter() - t0
         call.t_host_total = sum(call.host_times)
         call.t_device_total = sum(call.device_times)
@@ -397,5 +539,7 @@ class PipelineScheduler:
             call.bytes_dense = self.stats.bytes_dense - base[1]
             call.cache_hits = self.stats.cache_hits - base[2]
             call.cache_misses = self.stats.cache_misses - base[3]
+            call.build_hits = self.stats.build_hits - base[4]
+            call.build_misses = self.stats.build_misses - base[5]
             call.last_dedup_ratio = self.stats.last_dedup_ratio
         return outs, call

@@ -11,6 +11,14 @@ Two device layouts are produced (the two ACK execution modes):
     GCN-style aggregation). TPU-preferred: aggregation runs on the MXU.
   * edges:  (src, dst, w) int32/float32 padded to E_max — the faithful
     scatter-gather layout for the sparse-mode kernel.
+
+The per-target build artifact is ``SubgraphRows`` — every structure array
+one target's subgraph contributes to the batch, and the unit the Build
+stage caches (store.nbr_cache.SubgraphRowCache): a neighborhood-cache hit
+whose rows are also cached skips induced-subgraph construction entirely.
+The sg-mode edge extras (``self_w``, ``edge_w_mean``) are computed here
+directly from the CSR edge lists — not recovered per batch by densifying
+``adj`` — and carried on ``SubgraphBatch``.
 """
 from __future__ import annotations
 
@@ -21,6 +29,39 @@ import numpy as np
 
 from repro.core.ini import ini_batch
 from repro.graphs.csr import CSRGraph, subgraph_edges
+
+
+@dataclass(frozen=True)
+class SubgraphRows:
+    """One target's built subgraph structure, padded to (n_pad, e_pad):
+    the Build stage's output (and cache value) — everything
+    ``build_subgraph`` produces except features."""
+    adj: np.ndarray          # [n, n]  float32, normalized, row=dst
+    adj_mean: np.ndarray     # [n, n]  row-stochastic (no self loops)
+    mask: np.ndarray         # [n]     float32 (1 = real vertex)
+    edge_src: np.ndarray     # [e]     int32 (padded with -> dummy vertex)
+    edge_dst: np.ndarray     # [e]     int32
+    edge_w: np.ndarray       # [e]     float32 (0 on padding)
+    self_w: np.ndarray       # [n]     float32 self-loop weight (adj diag)
+    edge_w_mean: np.ndarray  # [e]     float32 row-stochastic edge weight
+    n_vertices: int
+    n_edges: int
+    edges_dropped: int
+
+    def freeze(self) -> "SubgraphRows":
+        """Mark every array read-only (cache entries are shared across
+        batches — assemble copies them into the batch tensors)."""
+        for a in (self.adj, self.adj_mean, self.mask, self.edge_src,
+                  self.edge_dst, self.edge_w, self.self_w,
+                  self.edge_w_mean):
+            a.flags.writeable = False
+        return self
+
+    @property
+    def nbytes(self) -> int:
+        return sum(a.nbytes for a in (
+            self.adj, self.adj_mean, self.mask, self.edge_src,
+            self.edge_dst, self.edge_w, self.self_w, self.edge_w_mean))
 
 
 @dataclass(frozen=True)
@@ -37,6 +78,11 @@ class SubgraphBatch:
     n_edges: np.ndarray      # [C]        int32
     targets: np.ndarray      # [C]        int64 global ids
     edges_dropped: int = 0   # edges beyond E budget (sg mode only)
+    # sg-mode edge extras, carried from the Build stage (computed from the
+    # CSR edge lists — None only for externally constructed batches, where
+    # consumers fall back to recovering them from the dense adjacency)
+    self_w: Optional[np.ndarray] = None       # [C, N] float32
+    edge_w_mean: Optional[np.ndarray] = None  # [C, E] float32
 
     @property
     def batch_size(self) -> int:
@@ -59,13 +105,12 @@ class SubgraphBatch:
         return sum(a.nbytes for a in self.device_arrays(mode).values())
 
 
-def build_subgraph(g: CSRGraph, nodes: np.ndarray, n_pad: int,
-                   e_pad: Optional[int] = None, with_feats: bool = True):
-    """One induced subgraph, padded to n_pad vertices (and e_pad edges).
-
-    ``with_feats=False`` skips host-side feature materialization entirely
-    (feats comes back [n_pad, 0]) — used when a feature-store strategy
-    ships indices instead, so the dense block is never allocated."""
+def build_subgraph_rows(g: CSRGraph, nodes: np.ndarray, n_pad: int,
+                        e_pad: Optional[int] = None) -> SubgraphRows:
+    """One induced subgraph's structure arrays, padded to n_pad vertices
+    (and e_pad edges) — no feature materialization (features are the
+    store's concern, and caching built rows must not pin feature blocks).
+    """
     k = len(nodes)
     assert k <= n_pad
     src, dst = subgraph_edges(g, nodes)
@@ -76,17 +121,15 @@ def build_subgraph(g: CSRGraph, nodes: np.ndarray, n_pad: int,
     adj = np.zeros((n_pad, n_pad), np.float32)
     adj[dst, src] = (inv_sqrt[dst] * inv_sqrt[src]).astype(np.float32)
     idx = np.arange(k)
-    adj[idx, idx] = (inv_sqrt * inv_sqrt).astype(np.float32)
+    self_w = np.zeros(n_pad, np.float32)
+    self_w[:k] = (inv_sqrt * inv_sqrt).astype(np.float32)
+    adj[idx, idx] = self_w[:k]
     # row-stochastic mean adjacency (neighbors only; SAGE-style)
     adj_mean = np.zeros((n_pad, n_pad), np.float32)
     indeg = np.zeros(k, np.float64)
     np.add.at(indeg, dst, 1.0)
     nz = indeg[dst] > 0
     adj_mean[dst[nz], src[nz]] = (1.0 / indeg[dst[nz]]).astype(np.float32)
-    feats = np.zeros((n_pad, g.feature_dim if with_feats else 0),
-                     np.float32)
-    if with_feats:
-        feats[:k] = g.features[nodes]
     mask = np.zeros(n_pad, np.float32)
     mask[:k] = 1.0
     e = len(src)
@@ -102,7 +145,33 @@ def build_subgraph(g: CSRGraph, nodes: np.ndarray, n_pad: int,
     ew = np.zeros(e_pad, np.float32)
     es[:e], ed[:e] = src, dst
     ew[:e] = adj[dst, src]
-    return feats, adj, adj_mean, mask, es, ed, ew, k, e, dropped
+    # sg-mode mean weights straight from the in-degree counts: float32
+    # division of exact integer counts, bitwise what densifying adj_mean
+    # and re-counting nonzeros used to produce
+    inv_indeg = 1.0 / np.maximum(indeg, 1.0).astype(np.float32)
+    ew_mean = np.zeros(e_pad, np.float32)
+    ew_mean[:e] = np.where(ew[:e] != 0, inv_indeg[dst], 0.0)
+    return SubgraphRows(adj=adj, adj_mean=adj_mean, mask=mask,
+                        edge_src=es, edge_dst=ed, edge_w=ew,
+                        self_w=self_w, edge_w_mean=ew_mean,
+                        n_vertices=k, n_edges=e, edges_dropped=dropped)
+
+
+def build_subgraph(g: CSRGraph, nodes: np.ndarray, n_pad: int,
+                   e_pad: Optional[int] = None, with_feats: bool = True):
+    """One induced subgraph, padded to n_pad vertices (and e_pad edges) —
+    the one-call back-compat spelling over ``build_subgraph_rows``.
+
+    ``with_feats=False`` skips host-side feature materialization entirely
+    (feats comes back [n_pad, 0]) — used when a feature-store strategy
+    ships indices instead, so the dense block is never allocated."""
+    r = build_subgraph_rows(g, nodes, n_pad, e_pad)
+    feats = np.zeros((n_pad, g.feature_dim if with_feats else 0),
+                     np.float32)
+    if with_feats:
+        feats[:len(nodes)] = g.features[nodes]
+    return (feats, r.adj, r.adj_mean, r.mask, r.edge_src, r.edge_dst,
+            r.edge_w, r.n_vertices, r.n_edges, r.edges_dropped)
 
 
 def default_edge_pad(g: CSRGraph, n: int) -> int:
@@ -148,10 +217,13 @@ def build_batch(g: CSRGraph, targets, n: int, e_pad: Optional[int] = None,
     return batch_from_node_lists(g, targets, node_lists, n, e_pad)
 
 
-def batch_from_node_lists(g: CSRGraph, targets, node_lists: List[np.ndarray],
-                          n: int, e_pad: int,
-                          build_feats: bool = True) -> SubgraphBatch:
-    C = len(node_lists)
+def assemble_batch(g: CSRGraph, targets, node_lists: List[np.ndarray],
+                   rows: List[SubgraphRows], n: int, e_pad: int,
+                   build_feats: bool = True) -> SubgraphBatch:
+    """Pack per-target built rows into one fixed-shape SubgraphBatch
+    (the Pack stage's structure half; features are materialized here only
+    for strategies that ship the dense block)."""
+    C = len(rows)
     f = g.feature_dim if build_feats else 0   # [C, n, 0]: shape carriers
     feats = np.zeros((C, n, f), np.float32)   # (n, batch_size) stay valid
     adj = np.zeros((C, n, n), np.float32)
@@ -160,16 +232,32 @@ def batch_from_node_lists(g: CSRGraph, targets, node_lists: List[np.ndarray],
     es = np.zeros((C, e_pad), np.int32)
     ed = np.zeros((C, e_pad), np.int32)
     ew = np.zeros((C, e_pad), np.float32)
+    self_w = np.zeros((C, n), np.float32)
+    ew_mean = np.zeros((C, e_pad), np.float32)
     nv = np.zeros(C, np.int32)
     ne = np.zeros(C, np.int32)
     dropped = 0
-    for i, nodes in enumerate(node_lists):
-        (feats[i], adj[i], adj_mean[i], mask[i], es[i], ed[i], ew[i],
-         nv[i], ne[i], d) = build_subgraph(g, nodes[:n], n, e_pad,
-                                           with_feats=build_feats)
-        dropped += d
+    for i, r in enumerate(rows):
+        adj[i], adj_mean[i], mask[i] = r.adj, r.adj_mean, r.mask
+        es[i], ed[i], ew[i] = r.edge_src, r.edge_dst, r.edge_w
+        self_w[i], ew_mean[i] = r.self_w, r.edge_w_mean
+        nv[i], ne[i] = r.n_vertices, r.n_edges
+        dropped += r.edges_dropped
+        if build_feats:
+            nodes = node_lists[i][:n]
+            feats[i, :len(nodes)] = g.features[nodes]
     return SubgraphBatch(feats=feats, adj=adj, adj_mean=adj_mean, mask=mask,
                          edge_src=es, edge_dst=ed, edge_w=ew,
                          n_vertices=nv, n_edges=ne,
                          targets=np.asarray(targets, np.int64),
-                         edges_dropped=dropped)
+                         edges_dropped=dropped,
+                         self_w=self_w, edge_w_mean=ew_mean)
+
+
+def batch_from_node_lists(g: CSRGraph, targets, node_lists: List[np.ndarray],
+                          n: int, e_pad: int,
+                          build_feats: bool = True) -> SubgraphBatch:
+    rows = [build_subgraph_rows(g, nodes[:n], n, e_pad)
+            for nodes in node_lists]
+    return assemble_batch(g, targets, node_lists, rows, n, e_pad,
+                          build_feats=build_feats)

@@ -85,6 +85,14 @@ def init_appnp_layer(key, f_in, f_out, alpha=0.15, dtype=jnp.float32):
             "teleport": jnp.asarray(alpha - 1.0, dtype)}
 
 
+def init_sgc_layer(key, f_in, f_out, dtype=jnp.float32):
+    """SGC: ONE weight matrix total. Layer0 applies it (transform-first —
+    S^K (X W) == (S^K X) W by associativity, so this is the exact SGC
+    logits map); inner layers are propagation-only, their ``w`` rides
+    along unused so the stacked params give lax.scan its length."""
+    return {"w": dense_init(key, (f_in, f_out), dtype=dtype)}
+
+
 def init_gat_layer(key, f_in, f_out, n_heads, dtype=jnp.float32):
     assert f_out % n_heads == 0
     ks = split_keys(key, 3)

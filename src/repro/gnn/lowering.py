@@ -19,6 +19,10 @@ differing only in feature widths):
         inner:  Aggregate[gcn] -> Residual[(1+teleport) h0, gain 1-a]
         (propagation-only inner template: NO Transform — h' =
         (1-a) A_hat h + (1+teleport) h0, the exact APPNP power step)
+  sgc   layer0: Transform[w] (none)   — the single linear map
+        inner:  Aggregate[gcn]        — pure propagation, K = L-1 steps
+        (h_L = S^(L-1) (X W) == (S^(L-1) X) W: the SGC S^K X W recurrence
+        with the transform hoisted in front by associativity)
 
 Tail: Readout[cfg.readout] and, when ``cfg.num_classes`` is set, Classify.
 """
@@ -32,7 +36,7 @@ from repro.core.program import (AckOp, AckProgram, Aggregate,
                                 register_lowering)
 from repro.gnn.layers import (init_appnp_layer, init_gat_layer,
                               init_gcn_layer, init_gin_layer,
-                              init_sage_layer)
+                              init_sage_layer, init_sgc_layer)
 
 
 def _tail(cfg) -> Tuple[AckOp, ...]:
@@ -98,6 +102,25 @@ def lower_appnp(cfg) -> AckProgram:
         Aggregate(norm="gcn", src="h", out="h"),
         Residual(src="h0", into="h", eps_param="teleport",
                  into_gain=1.0 - cfg.ppr_alpha),
+    ), tail=_tail(cfg), n_layers=cfg.n_layers)
+
+
+@register_lowering("sgc",
+                   layer_init=lambda cfg, key, fi, fo:
+                   init_sgc_layer(key, fi, fo))
+def lower_sgc(cfg) -> AckProgram:
+    """Simplified GCN (SGC): K propagation steps and ONE linear map —
+    logits = S^K X W, no nonlinearity between steps. Lowered
+    transform-first (layer0 applies W, every inner layer is a pure
+    Aggregate[gcn] propagation): h_L = S^(L-1) (X W), which equals the
+    canonical (S^(L-1) X) W by matmul associativity — so an L-layer sgc
+    program runs K = L-1 SGC propagation steps exactly, and the inner
+    Aggregate still gets its own dense/sg mux (a second propagation-only
+    template next to APPNP, with no Residual at all)."""
+    return AckProgram(kind=cfg.kind, layer0=(
+        Transform(w="w", b=None, act="none", src="h", out="h"),
+    ), inner=(
+        Aggregate(norm="gcn", src="h", out="h"),
     ), tail=_tail(cfg), n_layers=cfg.n_layers)
 
 

@@ -165,6 +165,12 @@ class _ModelLane:
                     "summary": self.engine.decision.summary,
                     "ops": [{"site": d.site, "op": d.op, "mode": d.mode}
                             for d in self.engine.decision]}
+        # host BatchPlan pipeline: per-stage wall time totals (the
+        # software Fig. 3 breakdown) + the Build stage's row-cache outcome
+        if sched.stage_times:
+            r["stage_times"] = {k: round(v, 6) for k, v
+                                in list(sched.stage_times.items())}
+        r["build_hit_rate"] = round(sched.build_hit_rate, 4)
         # store subsystem: transfer + cache observability (paper t_load /
         # t_pre — what the two-level store saved this lane)
         r["bytes_shipped"] = sched.bytes_shipped

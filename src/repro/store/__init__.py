@@ -5,11 +5,13 @@ from repro.store.feature_store import (DenseFeatureShipper,
                                        DeviceFeatureStore,
                                        PackedFeatureShipper,
                                        build_feature_source)
-from repro.store.nbr_cache import NeighborhoodCache, nbr_key
+from repro.store.nbr_cache import (FrontierCache, NeighborhoodCache,
+                                   SubgraphRowCache, nbr_key)
 from repro.store.policy import StorePolicy
 from repro.store.sharded import ShardedFeatureStore
 
-__all__ = ["StorePolicy", "NeighborhoodCache", "nbr_key",
+__all__ = ["StorePolicy", "NeighborhoodCache", "SubgraphRowCache",
+           "FrontierCache", "nbr_key",
            "DeviceFeatureStore", "PackedFeatureShipper",
            "DenseFeatureShipper", "ShardedFeatureStore",
            "build_feature_source"]

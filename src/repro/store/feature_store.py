@@ -22,6 +22,7 @@ feature width (``f_pad``), so padding is decided exactly once.
 from __future__ import annotations
 
 import threading
+from dataclasses import dataclass
 from typing import Dict, List, Optional, Tuple
 
 import jax
@@ -105,6 +106,19 @@ class PackedFeatureShipper:
         return {"strategy": self.name}
 
 
+@dataclass(frozen=True)
+class ResidencySnapshot:
+    """One immutable residency generation of the single-device store:
+    which vertices are resident (1-based slot, -1 = host partition) and
+    the device table built from that assignment. The generation rides in
+    the batch payload so a ``repin()`` landing between a batch's host
+    prep and its device gather cannot mismap slots."""
+    gen: int
+    slot_of: np.ndarray           # [V] int64, 1-based; -1 = host
+    table: jax.Array              # [R + 1, f_pad]; row 0 = zero pad
+    num_resident: int
+
+
 class DeviceFeatureStore:
     """Feature rows resident in device memory; batches ship slot maps.
 
@@ -117,12 +131,19 @@ class DeviceFeatureStore:
     ``budget_bytes=None`` pins the whole matrix (full-resident). Otherwise
     the top rows under the budget by ``hot_scores`` (default: degree — the
     PPR-mass proxy that needs no traffic history) are resident and the rest
-    stay host-side.
+    stay host-side. Every lookup then accumulates rank-weighted PPR mass
+    per row (node lists arrive PPR-rank-ordered, so 1/(1+rank) is the
+    online estimate of the paper's PPR score) and ``repin()`` re-derives
+    the resident set from that observed mass — the same hotness feedback
+    the sharded store has, for single-device deployments. Residency lives
+    in immutable generational snapshots (the generation rides in the
+    payload, refcounted per in-flight batch), so repins never corrupt
+    batches already in the pipeline.
     """
 
     name = "resident"
     needs_host_feats = False
-    payload_keys = ("feat_slots", "miss_feats")
+    payload_keys = ("feat_slots", "miss_feats", "store_gen")
 
     def __init__(self, graph: CSRGraph, f_pad: int, *,
                  budget_bytes: Optional[int] = None,
@@ -131,35 +152,83 @@ class DeviceFeatureStore:
         v = graph.num_vertices
         row_bytes = f_pad * 4
         if budget_bytes is None or budget_bytes >= (v + 1) * row_bytes:
-            resident_ids = np.arange(v, dtype=np.int64)
+            self.cap_rows = v                     # full residency
         else:
-            k = min(v, max(0, budget_bytes // row_bytes - 1))
-            score = np.asarray(graph.degrees if hot_scores is None
-                               else hot_scores, np.float64)
-            if len(score) != v:
-                raise ValueError("hot_scores must have one entry per vertex")
-            resident_ids = np.sort(np.argpartition(score, -k)[-k:]) if k \
-                else np.empty(0, np.int64)
-        # slot_of[v]: 1-based slot in the device table, -1 = host partition
-        self.slot_of = np.full(v, -1, np.int64)
-        self.slot_of[resident_ids] = np.arange(1, len(resident_ids) + 1)
-        table = np.zeros((len(resident_ids) + 1, f_pad), np.float32)
-        if len(resident_ids):
-            table[1:] = pad_feature_dim(graph.features[resident_ids],
-                                        f_pad)
-        self.table = jax.device_put(table)      # resident once, at start
-        self.num_resident = int(len(resident_ids))
-        self.device_bytes = int(table.nbytes)
+            self.cap_rows = min(v, max(0, budget_bytes // row_bytes - 1))
+        score = np.asarray(graph.degrees if hot_scores is None
+                           else hot_scores, np.float64)
+        if len(score) != v:
+            raise ValueError("hot_scores must have one entry per vertex")
         self._lock = threading.Lock()
+        self._snapshots: Dict[int, ResidencySnapshot] = {}
+        self._gen_refs: Dict[int, int] = {}
+        self._gen = 0
+        self._mass = np.zeros(v, np.float64)      # rank-weighted PPR mass
+        self._install(self._top_rows(score))
         self.lookups = 0          # vertex slots resolved (excl. padding)
         self.resident_lookups = 0  # served from the device table
         self.miss_rows_shipped = 0  # host-partition rows shipped
+        self.repins = 0
+
+    def _top_rows(self, score: np.ndarray) -> np.ndarray:
+        """Sorted ids of the ``cap_rows`` highest-scored vertices."""
+        v, k = self.graph.num_vertices, self.cap_rows
+        if k >= v:
+            return np.arange(v, dtype=np.int64)
+        return np.sort(np.argpartition(score, -k)[-k:]) if k \
+            else np.empty(0, np.int64)
+
+    def _install(self, resident_ids: np.ndarray) -> ResidencySnapshot:
+        """Build the table + slot map for ``resident_ids`` and make it
+        the current residency (new generation)."""
+        v = self.graph.num_vertices
+        slot_of = np.full(v, -1, np.int64)
+        slot_of[resident_ids] = np.arange(1, len(resident_ids) + 1)
+        table = np.zeros((len(resident_ids) + 1, self.f_pad), np.float32)
+        if len(resident_ids):
+            table[1:] = pad_feature_dim(
+                self.graph.features[resident_ids], self.f_pad)
+        with self._lock:
+            self._gen += 1
+            snap = ResidencySnapshot(self._gen, slot_of,
+                                     jax.device_put(table),
+                                     int(len(resident_ids)))
+            self._snapshots[snap.gen] = snap
+            self._current = snap
+            for g in [g for g in self._snapshots
+                      if g != snap.gen and not self._gen_refs.get(g)]:
+                del self._snapshots[g]
+        return snap
+
+    # back-compat spellings: residency state of the CURRENT generation
+    @property
+    def slot_of(self) -> np.ndarray:
+        return self._current.slot_of
+
+    @property
+    def table(self) -> jax.Array:
+        return self._current.table
+
+    @property
+    def num_resident(self) -> int:
+        return self._current.num_resident
+
+    @property
+    def device_bytes(self) -> int:
+        return int(self._current.table.nbytes)
 
     @property
     def resident_fraction(self) -> float:
         return self.num_resident / max(1, self.graph.num_vertices)
 
     def host_payload(self, node_lists, n, feats=None):
+        # one snapshot per batch, pinned until the gather: the payload
+        # holds a generation reference that device_feats releases — a
+        # payload that is never gathered keeps its generation's table
+        # alive, so don't accumulate abandoned payloads across repins
+        with self._lock:
+            snap = self._current
+            self._gen_refs[snap.gen] = self._gen_refs.get(snap.gen, 0) + 1
         c = len(node_lists)
         ids = np.full((c, n), -1, np.int64)
         for i, nl in enumerate(node_lists):
@@ -167,11 +236,11 @@ class DeviceFeatureStore:
             ids[i, :k] = nl[:k]
         valid = ids >= 0
         slots = np.zeros((c, n), np.int64)
-        slots[valid] = self.slot_of[ids[valid]]
+        slots[valid] = snap.slot_of[ids[valid]]
         missing = valid & (slots < 0)
         miss_ids = np.unique(ids[missing])
         if len(miss_ids):
-            slots[missing] = self.num_resident + 1 + \
+            slots[missing] = snap.num_resident + 1 + \
                 np.searchsorted(miss_ids, ids[missing])
             # the miss block ships at f_in and is padded on the DEVICE
             # (device_feats): the resident table carries the MXU pad
@@ -181,28 +250,80 @@ class DeviceFeatureStore:
             miss_feats = self.graph.features[miss_ids]
         else:
             miss_feats = np.zeros((0, self.graph.feature_dim), np.float32)
+        # rank-weighted PPR-mass accumulation (node lists are ordered by
+        # descending PPR score): the O(C*N) reduction runs OUTSIDE the
+        # lock, only the O(unique) merge holds it
+        w = (1.0 / (1.0 + np.arange(n, dtype=np.float64)))[None, :]
+        uids, uinv = np.unique(ids[valid], return_inverse=True)
+        contrib = np.bincount(uinv,
+                              weights=np.broadcast_to(w, ids.shape)[valid])
         with self._lock:
+            self._mass[uids] += contrib
             self.lookups += int(valid.sum())
             self.resident_lookups += int(valid.sum() - missing.sum())
             self.miss_rows_shipped += int(len(miss_ids))
         return {"feat_slots": slots.astype(np.int32),
-                "miss_feats": miss_feats}, None
+                "miss_feats": miss_feats,
+                "store_gen": np.asarray(snap.gen, np.int32)}, None
 
     def device_feats(self, payload):
-        slots = jnp.asarray(payload["feat_slots"])
-        miss = payload["miss_feats"]
-        # two gathers + select, NOT concatenate: concatenating would copy
-        # the whole resident table per batch (O(R * f_pad) device traffic
-        # and ~2x the HBM budget transiently — the budget exists because
-        # the table barely fits)
-        res = jnp.take(self.table, jnp.clip(slots, 0, self.num_resident),
-                       axis=0)
-        if miss.shape[0] == 0:
-            return res
-        mi = jnp.clip(slots - self.num_resident - 1, 0, miss.shape[0] - 1)
-        m = jnp.take(pad_feature_dim(jnp.asarray(miss), self.f_pad), mi,
-                     axis=0)
-        return jnp.where((slots > self.num_resident)[..., None], m, res)
+        gen = int(payload.get("store_gen", 0))
+        with self._lock:
+            snap = self._snapshots.get(gen, self._current)
+        try:
+            slots = jnp.asarray(payload["feat_slots"])
+            miss = payload["miss_feats"]
+            # two gathers + select, NOT concatenate: concatenating would
+            # copy the whole resident table per batch (O(R * f_pad) device
+            # traffic and ~2x the HBM budget transiently — the budget
+            # exists because the table barely fits)
+            res = jnp.take(snap.table,
+                           jnp.clip(slots, 0, snap.num_resident), axis=0)
+            if miss.shape[0] == 0:
+                return res
+            mi = jnp.clip(slots - snap.num_resident - 1, 0,
+                          miss.shape[0] - 1)
+            m = jnp.take(pad_feature_dim(jnp.asarray(miss), self.f_pad),
+                         mi, axis=0)
+            return jnp.where((slots > snap.num_resident)[..., None], m,
+                             res)
+        finally:
+            with self._lock:
+                r = self._gen_refs.get(gen, 0)
+                if r > 1:
+                    self._gen_refs[gen] = r - 1
+                elif r:
+                    self._gen_refs.pop(gen, None)
+                    if gen != self._current.gen:
+                        self._snapshots.pop(gen, None)
+
+    # -- online rebalancing ---------------------------------------------------
+    def repin(self, decay: float = 0.0) -> dict:
+        """Re-derive the resident set from the accumulated PPR mass: the
+        hottest ``cap_rows`` rows by observed mass (degree as tiebreak
+        for never-seen rows) become resident. In-flight batches keep
+        their residency snapshot (the payload carries its generation), so
+        serving never pauses. ``decay`` scales the retained mass
+        afterwards (0 keeps it all)."""
+        with self._lock:
+            mass = self._mass.copy()
+            old = self._current
+        key = mass + 1e-12 * self.graph.degrees.astype(np.float64)
+        new_ids = self._top_rows(key)
+        snap = self._install(new_ids)
+        was = old.slot_of >= 0
+        now = snap.slot_of >= 0
+        promoted = int((~was & now).sum())
+        demoted = int((was & ~now).sum())
+        with self._lock:
+            self.repins += 1
+            if decay:
+                self._mass *= (1.0 - decay)
+        return {"promoted": promoted, "demoted": demoted,
+                "resident_rows": snap.num_resident,
+                "mass_covered": round(float(
+                    mass[new_ids].sum() / mass.sum()), 4)
+                if mass.sum() > 0 else 1.0}
 
     def refresh_features(self, vertices) -> int:
         """Re-upload the resident rows of ``vertices`` from the (updated)
@@ -210,29 +331,38 @@ class DeviceFeatureStore:
         Host-partition vertices need nothing: their rows ship fresh from
         ``graph.features`` on every miss. Returns rows re-uploaded."""
         ids = as_vertex_ids(vertices)
-        slots = self.slot_of[ids]
-        res = slots > 0
-        if not res.any():
-            return 0
-        rows = pad_feature_dim(self.graph.features[ids[res]], self.f_pad)
-        with self._lock:      # table swap is read-modify-write: without
-            # the lock, concurrent invalidate() calls lose each other's
+        with self._lock:  # table swap is read-modify-write: without the
+            # lock, concurrent invalidate() calls lose each other's
             # re-uploads (readers are safe — jax arrays are immutable)
-            self.table = self.table.at[jnp.asarray(slots[res])].set(
-                jnp.asarray(rows))
+            snap = self._current
+            slots = snap.slot_of[ids]
+            res = slots > 0
+            if not res.any():
+                return 0
+            rows = pad_feature_dim(self.graph.features[ids[res]],
+                                   self.f_pad)
+            new = ResidencySnapshot(
+                snap.gen, snap.slot_of,
+                snap.table.at[jnp.asarray(slots[res])].set(
+                    jnp.asarray(rows)),
+                snap.num_resident)
+            self._snapshots[snap.gen] = new
+            self._current = new
         return int(res.sum())
 
     def report(self) -> dict:
         with self._lock:
             lk, res, miss = (self.lookups, self.resident_lookups,
                              self.miss_rows_shipped)
+            repins = self.repins
         return {"strategy": self.name,
                 "resident_rows": self.num_resident,
                 "resident_fraction": round(self.resident_fraction, 4),
                 "device_bytes": self.device_bytes,
                 "lookups": lk,
                 "resident_hit_rate": round(res / lk, 4) if lk else 0.0,
-                "miss_rows_shipped": miss}
+                "miss_rows_shipped": miss,
+                "repins": repins}
 
 
 def build_feature_source(graph: CSRGraph, policy, f_pad: int,

@@ -1,19 +1,27 @@
-"""Host neighborhood cache: per-target PPR node lists, LRU + pinned hot set.
+"""Host-side frontier-keyed caches: PPR neighborhoods + built subgraph rows.
 
 INI (PPR local push) is the dominant host cost per target (paper t_pre,
-Eq. 2). Under skewed traffic the same targets recur, and their PPR
-neighborhoods are deterministic in ``(target, N, alpha, eps)`` — so the
-push result is cached under exactly that key. Entries for targets in the
-pinned hot set never evict; everything else is LRU over ``capacity``
-entries. ``invalidate(vertices)`` drops every cached neighborhood whose
-push FRONTIER (the full touched set, cached alongside the truncated
-top-N selection) contains an updated vertex — a graph update at v
-changes the PPR of any target whose push reached v, even when v fell
-below that target's top-N cutoff — forcing recompute on next lookup.
+Eq. 2), and induced-subgraph construction is the next (the Build stage of
+the BatchPlan pipeline). Under skewed traffic the same targets recur, and
+both artifacts are deterministic in ``(target, N, alpha, eps)`` — so both
+cache under exactly that key:
 
-Thread-safe: the engine's prepare runs on the scheduler's host pool, so
-several batches may probe the cache concurrently. Two concurrent misses on
-the same target may both compute (benign stampede); last put wins. A PPR
+  * ``NeighborhoodCache``  — per-target PPR node lists (Select stage).
+  * ``SubgraphRowCache``   — the built per-target adjacency/edge rows
+    (``core.subgraph.SubgraphRows``, Build stage): a hit skips induced-
+    subgraph construction entirely, keyed alongside the neighborhood
+    entry with the SAME generation/frontier-exact invalidation.
+
+Entries for targets in the pinned hot set never evict; everything else is
+LRU over ``capacity`` entries. ``invalidate(vertices)`` drops every cached
+entry whose push FRONTIER (the full touched set, cached alongside the
+value) contains an updated vertex — a graph update at v changes the PPR of
+any target whose push reached v, even when v fell below that target's
+top-N cutoff — forcing recompute on next lookup.
+
+Thread-safe: the engine's stages run on the scheduler's stage workers, so
+several batches may probe a cache concurrently. Two concurrent misses on
+the same target may both compute (benign stampede); last put wins. A
 computation in flight across an ``invalidate()`` must NOT insert its
 (possibly pre-update) result: callers snapshot ``generation`` before
 computing and pass it to ``put()``, which drops the insert when any
@@ -23,7 +31,7 @@ from __future__ import annotations
 
 import threading
 from collections import OrderedDict
-from typing import Hashable, Iterable, Optional, Tuple
+from typing import Any, Hashable, Iterable, Optional, Tuple
 
 import numpy as np
 
@@ -43,8 +51,12 @@ def as_vertex_ids(vertices) -> np.ndarray:
     return np.unique(np.asarray(vertices, dtype=np.int64))
 
 
-class NeighborhoodCache:
-    """LRU + pinned-hot-set cache of per-target PPR node lists."""
+class FrontierCache:
+    """LRU + pinned-hot-set cache of per-target artifacts, each entry
+    carrying its push's full touched frontier for exact invalidation.
+    Subclasses pick the value type (``_freeze`` normalizes on insert and
+    ``_footprint`` names the array invalidation scans when an entry has
+    no frontier)."""
 
     def __init__(self, capacity: int = 4096,
                  pinned_targets: Optional[Iterable[int]] = None):
@@ -55,7 +67,7 @@ class NeighborhoodCache:
             int(t) for t in (() if pinned_targets is None
                              else pinned_targets))
         self._pinned: dict = {}               # never evicted
-        self._lru: "OrderedDict[Hashable, np.ndarray]" = OrderedDict()
+        self._lru: "OrderedDict[Hashable, tuple]" = OrderedDict()
         self._lock = threading.Lock()
         self.hits = 0
         self.misses = 0
@@ -63,8 +75,25 @@ class NeighborhoodCache:
         self.invalidations = 0                # entries dropped, not calls
         self._gen = 0                         # bumped by invalidate/clear
 
+    # -- value hooks ---------------------------------------------------------
+    def _freeze(self, value: Any) -> Any:
+        """Normalize a value on insert (subclasses may copy/read-only it)."""
+        return value
+
+    def _footprint(self, value: Any) -> Optional[np.ndarray]:
+        """Vertex ids invalidation scans when an entry has NO frontier
+        (the pre-frontier approximation); None = always drop."""
+        return None
+
     # -- core ----------------------------------------------------------------
-    def get(self, key: Key) -> Optional[np.ndarray]:
+    def get(self, key: Key) -> Optional[Any]:
+        ent = self.get_entry(key)
+        return None if ent is None else ent[0]
+
+    def get_entry(self, key: Key) -> Optional[Tuple[Any, np.ndarray]]:
+        """Like ``get`` but returns the full ``(value, frontier)`` entry —
+        the Select stage hands a hit's frontier to the Build stage so a
+        row-cache insert after a neighborhood hit stays frontier-exact."""
         with self._lock:
             ent = self._pinned.get(key)
             if ent is None:
@@ -75,26 +104,24 @@ class NeighborhoodCache:
                 self.misses += 1
                 return None
             self.hits += 1
-            return ent[0]
+            return ent
 
-    def put(self, key: Key, node_list: np.ndarray,
+    def put(self, key: Key, value: Any,
             generation: Optional[int] = None,
             frontier: Optional[np.ndarray] = None):
-        """Insert a computed neighborhood. Pass the ``generation`` read
-        BEFORE the computation started: if an invalidate() ran in between,
-        the result may reflect the pre-update graph and is dropped (the
-        next lookup recomputes). ``frontier`` is the push's full touched
-        set (``select_important(with_frontier=True)``): with it,
-        invalidation is EXACT; without it, invalidation falls back to
-        scanning the truncated top-N list (approximate — updates at
-        below-cutoff touched vertices go undetected)."""
-        nl = np.array(node_list)              # copy: freezing an aliased
-        nl.flags.writeable = False            # array would make the
-        # caller's own node list read-only as a side effect
+        """Insert a computed artifact. Pass the ``generation`` read BEFORE
+        the computation started: if an invalidate() ran in between, the
+        result may reflect the pre-update graph and is dropped (the next
+        lookup recomputes). ``frontier`` is the push's full touched set
+        (``select_important(with_frontier=True)``): with it, invalidation
+        is EXACT; without it, invalidation falls back to scanning the
+        value's footprint (approximate — updates at below-cutoff touched
+        vertices go undetected)."""
+        value = self._freeze(value)
         if frontier is not None:
             frontier = np.array(frontier)
             frontier.flags.writeable = False
-        ent = (nl, frontier)
+        ent = (value, frontier)
         with self._lock:
             if generation is not None and generation != self._gen:
                 return
@@ -108,18 +135,24 @@ class NeighborhoodCache:
                 self.evictions += 1
 
     def invalidate(self, vertices) -> int:
-        """Drop every cached neighborhood whose push FRONTIER contains any
-        of ``vertices`` (pinned entries included). Returns the number of
+        """Drop every cached entry whose push FRONTIER contains any of
+        ``vertices`` (pinned entries included). Returns the number of
         entries dropped.
 
-        Entries stored with their full touched set (the engine's miss
-        path caches it) are invalidated EXACTLY: an update at a vertex
-        the push reached — even one below the top-N cutoff — drops the
-        entry, because it can shift the target's scores enough to change
-        its true top-N. Entries without a frontier (direct put() callers)
-        fall back to scanning the truncated selection, the pre-frontier
-        approximation."""
+        Entries stored with their full touched set are invalidated
+        EXACTLY: an update at a vertex the push reached — even one below
+        the top-N cutoff — drops the entry, because it can shift the
+        target's scores enough to change its true top-N. Entries without
+        a frontier (direct put() callers) fall back to scanning the
+        value's footprint, the pre-frontier approximation."""
         vs = as_vertex_ids(vertices)
+
+        def touched(ent) -> bool:
+            scan = ent[1] if ent[1] is not None else self._footprint(ent[0])
+            if scan is None:
+                return True
+            return bool(np.isin(scan, vs, assume_unique=False).any())
+
         # the O(entries * frontier) membership scan runs OUTSIDE the lock
         # so concurrent serving-path get/put calls don't stall behind a
         # graph update; the generation bump (taken first) keeps any
@@ -129,9 +162,7 @@ class NeighborhoodCache:
             snapshot = [(store, list(store.items()))
                         for store in (self._pinned, self._lru)]
         stale = [(store, k, ent) for store, items in snapshot
-                 for k, ent in items
-                 if np.isin(ent[1] if ent[1] is not None else ent[0], vs,
-                            assume_unique=False).any()]
+                 for k, ent in items if touched(ent)]
         dropped = 0
         with self._lock:
             for store, k, ent in stale:
@@ -151,8 +182,8 @@ class NeighborhoodCache:
 
     @property
     def generation(self) -> int:
-        """Invalidation epoch — snapshot before a miss's PPR computation
-        and hand to put()."""
+        """Invalidation epoch — snapshot before a miss's computation and
+        hand to put()."""
         with self._lock:
             return self._gen
 
@@ -185,3 +216,32 @@ class NeighborhoodCache:
                     "hit_rate": round(self.hit_rate, 4),
                     "evictions": self.evictions,
                     "invalidations": self.invalidations}
+
+
+class NeighborhoodCache(FrontierCache):
+    """LRU + pinned-hot-set cache of per-target PPR node lists."""
+
+    def _freeze(self, node_list: np.ndarray) -> np.ndarray:
+        nl = np.array(node_list)              # copy: freezing an aliased
+        nl.flags.writeable = False            # array would make the
+        return nl                             # caller's list read-only
+
+    def _footprint(self, node_list: np.ndarray) -> np.ndarray:
+        # pre-frontier approximation: scan the truncated top-N selection
+        return node_list
+
+
+class SubgraphRowCache(FrontierCache):
+    """LRU cache of built per-target subgraph rows (SubgraphRows): a hit
+    skips the Build stage's induced-subgraph construction. Keyed by the
+    same ``nbr_key`` as the neighborhood cache — the node list is
+    deterministic in the key, so a neighborhood hit (or deterministic
+    recompute) always corresponds to these rows — and invalidated by the
+    same push frontier (the built rows only read vertices the push
+    touched)."""
+
+    def _freeze(self, rows):
+        return rows.freeze()
+
+    def _footprint(self, rows) -> Optional[np.ndarray]:
+        return None      # no node list stored: drop conservatively

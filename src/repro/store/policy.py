@@ -19,6 +19,18 @@ and t_load (host->device feature shipping) is traded for memory:
              "lru"      LRU cache of per-target PPR node lists
              "pinned"   LRU plus a never-evicted hot set (top-degree
                         targets by default, or an explicit pin list)
+
+  subgraph_rows: "auto" cache the BUILT per-target adjacency/edge rows
+                        (SubgraphRowCache) whenever a neighborhood cache
+                        is configured — a hit skips the Build stage's
+                        induced-subgraph construction entirely
+                 "on" | "off"  force it either way (rows are ~N^2 floats
+                        per target — "off" trades Build time for memory)
+
+  repin_every / repin_hit_floor: automatic residency rebalance triggers
+    (resident/sharded features only) — the pipeline's completion path
+    calls ``engine.repin()`` every K completed batches, or whenever the
+    store's resident hit rate since the last repin drops below the floor.
 """
 from __future__ import annotations
 
@@ -28,6 +40,8 @@ from typing import Optional, Tuple
 FEATURE_MODES = ("dense", "packed", "resident", "sharded")
 NBR_CACHE_MODES = ("none", "lru", "pinned")
 PLACEMENT_MODES = ("hash", "range")
+SUBGRAPH_ROW_MODES = ("auto", "on", "off")
+REPINNABLE_FEATURES = ("resident", "sharded")
 
 
 @dataclass(frozen=True)
@@ -50,6 +64,19 @@ class StorePolicy:
     nbr_capacity: int = 4096                 # LRU entries (excludes pins)
     pinned_targets: Optional[Tuple[int, ...]] = None
     pinned_count: int = 0                    # auto-pin top-degree targets
+    # Build-stage subgraph-row cache: "auto" follows nbr_cache (rows are
+    # cached whenever neighborhoods are), "on"/"off" force it
+    subgraph_rows: str = "auto"
+    # explicit entry cap; None = derive from the byte budget below (one
+    # entry is ~2N^2 floats + edge arrays — far heavier than a node list,
+    # so the default bound is bytes, capped at nbr_capacity entries)
+    subgraph_capacity: Optional[int] = None
+    subgraph_budget_bytes: int = 256 << 20
+    # automatic residency rebalance (resident/sharded features): repin
+    # every K completed batches, and/or when the store's resident hit
+    # rate since the last repin falls below the floor (0 = off for both)
+    repin_every: int = 0
+    repin_hit_floor: float = 0.0
 
     def __post_init__(self):
         if self.features not in FEATURE_MODES:
@@ -83,6 +110,31 @@ class StorePolicy:
         elif self.num_shards or self.shard_budget_bytes is not None:
             raise ValueError("num_shards/shard_budget_bytes require "
                              "features='sharded'")
+        if self.subgraph_rows not in SUBGRAPH_ROW_MODES:
+            raise ValueError(f"subgraph_rows={self.subgraph_rows!r}, "
+                             f"expected one of {SUBGRAPH_ROW_MODES}")
+        if self.subgraph_capacity is not None \
+                and self.subgraph_capacity < 1:
+            raise ValueError("subgraph_capacity must be >= 1")
+        if self.subgraph_budget_bytes < 1:
+            raise ValueError("subgraph_budget_bytes must be >= 1")
+        if self.repin_every < 0:
+            raise ValueError("repin_every must be >= 0")
+        if not 0.0 <= self.repin_hit_floor <= 1.0:
+            raise ValueError("repin_hit_floor must be in [0, 1]")
+        if (self.repin_every or self.repin_hit_floor) \
+                and self.features not in REPINNABLE_FEATURES:
+            raise ValueError(
+                "repin_every/repin_hit_floor require features in "
+                f"{REPINNABLE_FEATURES} (got {self.features!r})")
+
+    @property
+    def cache_subgraph_rows(self) -> bool:
+        """Resolved Build-cache switch: "auto" mirrors the neighborhood
+        cache (hot traffic that re-selects also re-builds)."""
+        if self.subgraph_rows == "auto":
+            return self.nbr_cache != "none"
+        return self.subgraph_rows == "on"
 
     def describe(self) -> dict:
         if self.pinned_targets is not None:
@@ -97,7 +149,11 @@ class StorePolicy:
              "hbm_budget_bytes": self.hbm_budget_bytes,
              "nbr_cache": self.nbr_cache,
              "nbr_capacity": self.nbr_capacity,
-             "pinned_count": pins}
+             "pinned_count": pins,
+             "subgraph_rows": self.cache_subgraph_rows}
+        if self.repin_every or self.repin_hit_floor:
+            d.update(repin_every=self.repin_every,
+                     repin_hit_floor=self.repin_hit_floor)
         if self.features == "sharded":
             b = self.shard_budget_bytes
             d.update(num_shards=self.num_shards, placement=self.placement,

@@ -158,10 +158,15 @@ class TestRepin:
         assert after >= before - 1e-9
         eng.close()
 
-    def test_repin_requires_sharded_store(self, graph, cfg, baseline):
-        ref, _ = baseline                          # resident, unsharded
+    def test_repin_requires_repinnable_store(self, graph, cfg, baseline):
+        ref, _ = baseline    # resident, unsharded: repin now SUPPORTED
+        rep = ref.repin()    # (PPR-mass accounting landed on the
+        assert rep["resident_rows"] >= 0      # single-device store too)
+        eng = DecoupledEngine(graph, cfg, params=ref.params,
+                              batch_size=8)   # dense: nothing resident
         with pytest.raises(ValueError, match="repin"):
-            ref.repin()
+            eng.repin()
+        eng.close()
 
     def test_inflight_placement_snapshot_survives_repin(self, graph, cfg,
                                                         baseline):
