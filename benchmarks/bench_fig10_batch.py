@@ -5,6 +5,7 @@ from __future__ import annotations
 import numpy as np
 
 from benchmarks.common import QUICK_SCALE, print_table, save_result, timeit
+from repro.core.config import ServingConfig
 from repro.core.engine import DecoupledEngine
 from repro.gnn.model import GNNConfig
 from repro.graphs.synthetic import get_graph
@@ -18,14 +19,16 @@ def run(quick: bool = True):
     rng = np.random.default_rng(0)
     rows = []
     for bs in sizes:
-        with DecoupledEngine(g, cfg, batch_size=min(bs, 64)) as eng:
+        with DecoupledEngine(
+                g, cfg,
+                config=ServingConfig(batch_size=min(bs, 64))) as eng:
             targets = rng.integers(0, g.num_vertices, size=bs)
             t = timeit(lambda: eng.infer(targets), warmup=1, iters=2)
             res = eng.infer(targets)
         rows.append({"batch": bs,
                      "latency_ms": round(t["min_s"] * 1e3, 2),
                      "ms_per_target": round(t["min_s"] * 1e3 / bs, 3),
-                     "overlap": res.stats.summary()["overlap"]})
+                     "overlap": res.stats.summary()["stages"]["overlap"]})
     print_table(rows, ["batch", "latency_ms", "ms_per_target", "overlap"])
     payload = {"rows": rows, "model": cfg.display}
     save_result("fig10_batch", payload)

@@ -13,6 +13,7 @@ import numpy as np
 from benchmarks.common import (QUICK_SCALE, print_table, save_result,
                                timeit)
 from repro.core.dse import TPUSpec, layer_costs
+from repro.core.config import ServingConfig
 from repro.core.engine import DecoupledEngine
 from repro.gnn.model import GNNConfig
 from repro.graphs.synthetic import get_graph
@@ -44,7 +45,9 @@ def run(quick: bool = True):
             for N in fields:
                 cfg = GNNConfig(kind=kind, n_layers=L, receptive_field=N,
                                 f_in=g.feature_dim)
-                with DecoupledEngine(g, cfg, batch_size=batch) as eng:
+                with DecoupledEngine(
+                        g, cfg,
+                        config=ServingConfig(batch_size=batch)) as eng:
                     t = timeit(lambda: eng.infer(targets), warmup=1,
                                iters=2 if quick else 3)
                 rows.append({

@@ -33,6 +33,7 @@ import numpy as np
 
 from benchmarks.common import (append_trajectory, print_table,
                                save_result, trajectory_path)
+from repro.core.config import ServingConfig
 from repro.core.engine import DecoupledEngine
 from repro.core.scheduler import PipelineScheduler
 from repro.gnn.model import GNNConfig
@@ -58,8 +59,9 @@ def make_policies(nbr_capacity: int) -> dict:
 def run_policy(name: str, policy: StorePolicy, g, cfg, params,
                batch_size: int, warm: np.ndarray, meas: np.ndarray) -> dict:
     c = batch_size
-    with DecoupledEngine(g, cfg, params=params, batch_size=c,
-                         store=policy) as eng:
+    with DecoupledEngine(g, cfg, params=params,
+                         config=ServingConfig(batch_size=c,
+                                              store=policy)) as eng:
         if name == "monolithic":
             # the one-stage back-compat spelling: ONE opaque host_fn on a
             # depth-worker pool (the pre-refactor pipeline shape)

@@ -29,6 +29,7 @@ import numpy as np
 
 from benchmarks.common import (append_trajectory, print_table,
                                save_result, trajectory_path)
+from repro.core.config import ServingConfig
 from repro.core.engine import DecoupledEngine
 from repro.gnn.model import GNNConfig
 from repro.graphs.csr import from_edge_list
@@ -50,8 +51,9 @@ def sparse_graph(v=2048, edges=256, f=64, seed=0):
 
 def run_mode(g, cfg, params, mode, targets, batch_size):
     import jax
-    with DecoupledEngine(g, cfg, params=params, batch_size=batch_size,
-                         mode=mode) as eng:
+    with DecoupledEngine(g, cfg, params=params,
+                         config=ServingConfig(batch_size=batch_size,
+                                              mode=mode)) as eng:
         # warm the compile out of the measurement
         w = eng.submit_chunk(targets[:batch_size]).result()
         jax.block_until_ready(w)

@@ -20,6 +20,7 @@ sys.path.insert(0, os.path.dirname(os.path.dirname(os.path.abspath(__file__))))
 import numpy as np
 
 from benchmarks.common import print_table, save_result
+from repro.core.config import ServingConfig
 from repro.core.engine import DecoupledEngine
 from repro.gnn.model import GNNConfig
 from repro.graphs.synthetic import get_graph
@@ -36,7 +37,8 @@ def run(requests: int = 384, batch_size: int = 16, scale: float = 0.03,
         cfg = GNNConfig(kind=kind, n_layers=2,
                         receptive_field=receptive_field,
                         f_in=g.feature_dim)
-        engines[kind] = DecoupledEngine(g, cfg, batch_size=batch_size)
+        engines[kind] = DecoupledEngine(
+            g, cfg, config=ServingConfig(batch_size=batch_size))
 
     srv = GNNServer(max_wait_s=0.02)
     for kind, eng in engines.items():
@@ -68,13 +70,14 @@ def run(requests: int = 384, batch_size: int = 16, scale: float = 0.03,
     rows = []
     for kind in MODEL_KINDS:
         m = rep["models"][kind]
-        rows.append({"model": kind, "n": m["n"],
-                     "p50_ms": round(m["p50"] * 1e3, 2),
-                     "p90_ms": round(m["p90"] * 1e3, 2),
-                     "p99_ms": round(m["p99"] * 1e3, 2),
-                     "batch_ms": round(m["batch_mean"] * 1e3, 2),
-                     "overlap": m["overlap"],
-                     "sched_batches": m["sched_batches"]})
+        lat = m["latency"]
+        rows.append({"model": kind, "n": lat["n"],
+                     "p50_ms": round(lat["p50"] * 1e3, 2),
+                     "p90_ms": round(lat["p90"] * 1e3, 2),
+                     "p99_ms": round(lat["p99"] * 1e3, 2),
+                     "batch_ms": round(lat["batch_mean"] * 1e3, 2),
+                     "overlap": m["stages"]["overlap"],
+                     "sched_batches": m["stages"]["batches"]})
     print_table(rows, ["model", "n", "p50_ms", "p90_ms", "p99_ms",
                        "batch_ms", "overlap", "sched_batches"])
     print(f"\n{requests} requests over {len(MODEL_KINDS)} models in "

@@ -29,6 +29,7 @@ import numpy as np
 
 from benchmarks.common import (append_trajectory, print_table,
                                save_result, trajectory_path)
+from repro.core.config import ServingConfig
 from repro.core.engine import DecoupledEngine
 from repro.gnn.model import GNNConfig
 from repro.graphs.synthetic import get_graph, zipf_traffic
@@ -58,8 +59,9 @@ def run_policy(name: str, policy: StorePolicy, g, cfg, params,
                batch_size: int, warm: np.ndarray, meas: np.ndarray,
                repin_between: bool = False) -> dict:
     c = batch_size
-    with DecoupledEngine(g, cfg, params=params, batch_size=c,
-                         store=policy) as eng:
+    with DecoupledEngine(g, cfg, params=params,
+                         config=ServingConfig(batch_size=c,
+                                              store=policy)) as eng:
         for i in range(0, len(warm), c):           # compile + cache warmup
             eng.submit_chunk(warm[i:i + c]).result()
         if repin_between:                          # online rebalance from

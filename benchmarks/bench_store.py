@@ -34,6 +34,7 @@ import numpy as np
 
 from benchmarks.common import (append_trajectory, print_table,
                                save_result, trajectory_path)
+from repro.core.config import ServingConfig
 from repro.core.engine import DecoupledEngine
 from repro.gnn.model import GNNConfig
 from repro.graphs.synthetic import get_graph, zipf_traffic
@@ -61,8 +62,9 @@ def make_policies(nbr_capacity: int) -> dict:
 def run_policy(name: str, policy: StorePolicy, g, cfg, params,
                batch_size: int, warm: np.ndarray, meas: np.ndarray) -> dict:
     c = batch_size
-    with DecoupledEngine(g, cfg, params=params, batch_size=c,
-                         store=policy) as eng:
+    with DecoupledEngine(g, cfg, params=params,
+                         config=ServingConfig(batch_size=c,
+                                              store=policy)) as eng:
         for i in range(0, len(warm), c):           # compile + cache warmup
             eng.submit_chunk(warm[i:i + c]).result()
         s = eng.scheduler.stats

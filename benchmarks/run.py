@@ -16,8 +16,8 @@ import traceback
 from benchmarks import (bench_eq1_loadbalance, bench_fig3_breakdown,
                         bench_fig8_latency, bench_fig10_batch,
                         bench_kernels, bench_pipeline, bench_program,
-                        bench_serve_multimodel, bench_shard, bench_store,
-                        bench_table5_load, bench_table6_ini)
+                        bench_rpc, bench_serve_multimodel, bench_shard,
+                        bench_store, bench_table5_load, bench_table6_ini)
 
 SUITES = {
     "fig8_latency": bench_fig8_latency.run,
@@ -32,6 +32,7 @@ SUITES = {
     "program": bench_program.run_suite,
     "shard": bench_shard.run_suite,
     "pipeline": bench_pipeline.run_suite,
+    "rpc": bench_rpc.run_suite,
 }
 
 

@@ -9,6 +9,7 @@ triple-buffered host/device pipeline hiding preparation latency.
 """
 import numpy as np
 
+from repro.core.config import ServingConfig
 from repro.core.engine import DecoupledEngine
 from repro.gnn.model import GNNConfig
 from repro.graphs.synthetic import get_graph
@@ -24,7 +25,7 @@ cfg = GNNConfig(kind="sage", n_layers=5, receptive_field=128,
                 f_in=g.feature_dim)
 
 # 3. engine: host INI + subgraph build, device = one jitted ACK program
-engine = DecoupledEngine(g, cfg, batch_size=64)
+engine = DecoupledEngine(g, cfg, config=ServingConfig(batch_size=64))
 print(f"model {cfg.display}; ACK mode = {engine.mode} "
       f"({engine.decision.summary}; {engine.decision.reason})")
 
@@ -35,7 +36,8 @@ result = engine.infer(targets)
 print(f"embeddings: {result.embeddings.shape} "
       f"(finite: {np.isfinite(result.embeddings).all()})")
 s = result.stats.summary()
-print(f"latency: {s['t_wall']*1e3:.1f} ms wall for {len(targets)} targets "
-      f"({s['t_wall']*1e6/len(targets):.0f} us/target)")
-print(f"host/device overlap: {s['overlap']:.0%} of prep hidden "
-      f"(t_init {s['t_init']*1e3:.1f} ms, paper's Fig. 7 scheduling)")
+lat = s["latency"]
+print(f"latency: {lat['t_wall']*1e3:.1f} ms wall for {len(targets)} targets "
+      f"({lat['t_wall']*1e6/len(targets):.0f} us/target)")
+print(f"host/device overlap: {s['stages']['overlap']:.0%} of prep hidden "
+      f"(t_init {lat['t_init']*1e3:.1f} ms, paper's Fig. 7 scheduling)")

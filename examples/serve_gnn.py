@@ -9,6 +9,7 @@ import time
 
 import numpy as np
 
+from repro.core.config import ServingConfig
 from repro.core.engine import DecoupledEngine
 from repro.gnn.model import GNNConfig
 from repro.gnn.train import train_gnn
@@ -33,7 +34,7 @@ print(f"  loss {h0['loss']:.3f} -> {h1['loss']:.3f}, "
       f"acc {h0['acc']:.2f} -> {h1['acc']:.2f}")
 
 engine = DecoupledEngine(g, cfg, params=out["params"],
-                         batch_size=args.batch_size)
+                         config=ServingConfig(batch_size=args.batch_size))
 server = GNNServer(engine, max_wait_s=0.02)
 server.start()
 

@@ -15,6 +15,7 @@ import time
 
 import numpy as np
 
+from repro.core.config import ServingConfig
 from repro.core.engine import DecoupledEngine
 from repro.gnn.model import GNNConfig
 from repro.graphs.synthetic import get_graph
@@ -32,8 +33,8 @@ server = GNNServer(max_wait_s=0.02)
 for kind in kinds:
     cfg = GNNConfig(kind=kind, n_layers=2, receptive_field=64,
                     f_in=g.feature_dim)
-    server.register(kind, DecoupledEngine(g, cfg,
-                                          batch_size=args.batch_size))
+    server.register(kind, graph=g, cfg=cfg,
+                    config=ServingConfig(batch_size=args.batch_size))
 print(f"registered {list(server.models)} under one plan: "
       f"BF={server.plan.block_f}, c_core={server.plan.c_core}, "
       f"vmem={server.plan.vmem_used >> 10} KiB")
@@ -58,8 +59,10 @@ print(f"\nserved {args.requests} requests across {len(kinds)} models "
       f"in {wall:.2f}s ({args.requests / wall:.0f} req/s)")
 for kind in kinds:
     m = rep["models"][kind]
-    print(f"  {kind:5s} n={m['n']:4d}  p50 {m['p50'] * 1e3:7.1f} ms  "
-          f"p99 {m['p99'] * 1e3:7.1f} ms  overlap {m['overlap']:.2f}")
+    lat = m["latency"]
+    print(f"  {kind:5s} n={lat['n']:4d}  p50 {lat['p50'] * 1e3:7.1f} ms  "
+          f"p99 {lat['p99'] * 1e3:7.1f} ms  "
+          f"overlap {m['stages']['overlap']:.2f}")
 r = reqs[0]
 print(f"\nsample: vertex {r.target} via {r.model} -> "
       f"embedding[:4] = {np.round(r.embedding[:4], 3)}")

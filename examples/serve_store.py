@@ -15,6 +15,7 @@ import time
 
 import numpy as np
 
+from repro.core.config import ServingConfig
 from repro.core.engine import DecoupledEngine
 from repro.gnn.model import GNNConfig
 from repro.graphs.synthetic import get_graph, zipf_traffic
@@ -32,7 +33,8 @@ cfg = GNNConfig(kind="gcn", n_layers=2, receptive_field=32,
                 f_in=g.feature_dim)
 policy = StorePolicy(features="resident", nbr_cache="lru",
                      nbr_capacity=512)
-engine = DecoupledEngine(g, cfg, batch_size=args.batch_size, store=policy)
+engine = DecoupledEngine(g, cfg, config=ServingConfig(
+    batch_size=args.batch_size, store=policy))
 
 server = GNNServer(engine, max_wait_s=0.02)
 server.start()
@@ -47,15 +49,16 @@ wall = time.perf_counter() - t0
 server.stop()
 
 rep = server.report()["models"]["default"]
+lat, store = rep["latency"], rep["store"]
 print(f"served {args.requests} Zipf({args.zipf}) requests in {wall:.2f}s "
       f"({args.requests / wall:.0f} req/s)")
-print(f"p50={rep['p50'] * 1e3:.1f}ms p99={rep['p99'] * 1e3:.1f}ms "
-      f"overlap={rep['overlap']}")
-print(f"nbr-cache hit rate: {rep['cache_hit_rate']:.2%}  "
-      f"transfer ratio: {rep['transfer_ratio']:.3f} "
-      f"(bytes shipped: {rep['bytes_shipped'] >> 10} KiB)")
-print("store:", rep["store"]["features"])
-print("nbr_cache:", rep["store"]["nbr_cache"])
+print(f"p50={lat['p50'] * 1e3:.1f}ms p99={lat['p99'] * 1e3:.1f}ms "
+      f"overlap={rep['stages']['overlap']}")
+print(f"nbr-cache hit rate: {store['cache_hit_rate']:.2%}  "
+      f"transfer ratio: {store['transfer_ratio']:.3f} "
+      f"(bytes shipped: {store['bytes_shipped'] >> 10} KiB)")
+print("store:", store["features"])
+print("nbr_cache:", store["nbr_cache"])
 
 # graph-update hook: invalidating a hub forces recompute of every cached
 # neighborhood that reaches it

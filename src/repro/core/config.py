@@ -1,0 +1,153 @@
+"""ServingConfig — the one typed knob surface for a serving deployment.
+
+Engine construction used to take a growing pile of keyword arguments
+(batch_size / impl / num_threads / store=... / depth buried in the
+scheduler); the multi-host transport would have added five more. This
+module folds them into ONE frozen config object covering the three knob
+families a deployment has:
+
+  * device program:  batch_size, mode, impl, e_pad, seed
+  * host pipeline:   num_threads, depth (triple buffering),
+                     max_inflight (backpressure), max_wait_s
+                     (micro-batcher tail-latency deadline)
+  * store + transport: ``StorePolicy``, and where Select/Build run —
+      transport="local"   in-process stages (the default)
+      transport="inproc"  a private GraphHostService behind the loopback
+                          transport: full wire codec, one process
+                          (hermetic bitwise check of the remote path)
+      transport="socket"  TCP to ``endpoints`` graph hosts, routed
+                          round-robin or partition-affine with per-call
+                          timeout + bounded retry
+
+``DecoupledEngine(graph, cfg, config=ServingConfig(...))`` and
+``GNNServer.register(name, graph=..., cfg=..., config=...)`` are the new
+spellings; the old per-kwarg spellings still work through
+``ServingConfig.from_kwargs`` (DeprecationWarning — see
+docs/API_MIGRATION.md for the mapping).
+"""
+from __future__ import annotations
+
+import dataclasses
+import warnings
+from dataclasses import dataclass, field
+from typing import Optional, Tuple
+
+from repro.store.policy import StorePolicy
+
+TRANSPORT_MODES = ("local", "inproc", "socket")
+ROUTING_MODES = ("round_robin", "affine")
+
+
+@dataclass(frozen=True)
+class ServingConfig:
+    """Per-deployment serving configuration (see module docstring)."""
+    # device program
+    batch_size: int = 64
+    mode: str = "auto"                 # per-op mux: auto | dense | sg
+    impl: str = "xla"                  # kernel substrate: xla | pallas
+    seed: int = 0                      # param init when params=None
+    e_pad: Optional[int] = None        # edge budget; None = derive
+    # store
+    store: StorePolicy = field(default_factory=StorePolicy)
+    # host pipeline
+    num_threads: int = 8
+    depth: int = 3                     # paper's triple buffering
+    max_inflight: Optional[int] = None  # backpressure; None = 2 * depth
+    max_wait_s: float = 0.005          # micro-batcher deadline (server)
+    # transport: where Select/Build run
+    transport: str = "local"
+    endpoints: Tuple[str, ...] = ()    # "host:port" graph hosts (socket)
+    rpc_timeout_s: float = 30.0        # per-call deadline
+    rpc_retries: int = 2               # extra attempts on OTHER hosts
+    rpc_concurrency: int = 4           # in-flight calls per deployment
+    routing: str = "round_robin"       # round_robin | affine
+
+    def __post_init__(self):
+        if not isinstance(self.store, StorePolicy):
+            raise TypeError(
+                f"store must be a StorePolicy, got "
+                f"{type(self.store).__name__}")
+        if self.batch_size < 1:
+            raise ValueError("batch_size must be >= 1")
+        if self.num_threads < 1:
+            raise ValueError("num_threads must be >= 1")
+        if self.depth < 1:
+            raise ValueError("depth must be >= 1")
+        if self.max_inflight is not None and self.max_inflight < 1:
+            raise ValueError("max_inflight must be >= 1 (or None)")
+        if self.max_wait_s < 0:
+            raise ValueError("max_wait_s must be >= 0")
+        if self.transport not in TRANSPORT_MODES:
+            raise ValueError(f"transport={self.transport!r}, expected "
+                             f"one of {TRANSPORT_MODES}")
+        if self.routing not in ROUTING_MODES:
+            raise ValueError(f"routing={self.routing!r}, expected one "
+                             f"of {ROUTING_MODES}")
+        if not isinstance(self.endpoints, tuple):
+            object.__setattr__(self, "endpoints", tuple(self.endpoints))
+        if self.transport == "socket" and not self.endpoints:
+            raise ValueError(
+                "transport='socket' needs at least one 'host:port' in "
+                "endpoints")
+        if self.endpoints and self.transport != "socket":
+            raise ValueError(
+                f"endpoints are only meaningful with transport='socket' "
+                f"(got transport={self.transport!r})")
+        if self.rpc_timeout_s <= 0:
+            raise ValueError("rpc_timeout_s must be > 0")
+        if self.rpc_retries < 0:
+            raise ValueError("rpc_retries must be >= 0")
+        if self.rpc_concurrency < 1:
+            raise ValueError("rpc_concurrency must be >= 1")
+
+    @property
+    def remote(self) -> bool:
+        """Whether Select/Build run behind a transport."""
+        return self.transport != "local"
+
+    @classmethod
+    def from_kwargs(cls, base: Optional["ServingConfig"] = None,
+                    _warn: bool = True, **kwargs) -> "ServingConfig":
+        """Adapter from the legacy per-kwarg engine/server spellings.
+
+        Accepts exactly the field names of ``ServingConfig`` (the legacy
+        engine kwargs map 1:1 — see docs/API_MIGRATION.md); unknown
+        names raise TypeError listing the valid set, and the removed
+        ``dedup_features=`` names its replacement."""
+        if "dedup_features" in kwargs:
+            raise TypeError(
+                "dedup_features= was removed; use ServingConfig(store="
+                "StorePolicy(features='packed')) (or the equivalent "
+                "store= argument) instead")
+        names = {f.name for f in dataclasses.fields(cls)}
+        unknown = sorted(set(kwargs) - names)
+        if unknown:
+            raise TypeError(
+                f"unknown serving option(s) {unknown}; valid options "
+                f"are the ServingConfig fields: {sorted(names)}")
+        if kwargs and kwargs.get("store") is None:
+            kwargs.pop("store", None)   # legacy store=None means default
+        if _warn and kwargs:
+            warnings.warn(
+                "per-keyword serving options are deprecated; pass "
+                "config=ServingConfig(...) instead "
+                "(see docs/API_MIGRATION.md)",
+                DeprecationWarning, stacklevel=3)
+        if base is not None:
+            return dataclasses.replace(base, **kwargs) if kwargs else base
+        return cls(**kwargs)
+
+    def describe(self) -> dict:
+        d = {"batch_size": self.batch_size, "mode": self.mode,
+             "impl": self.impl, "depth": self.depth,
+             "num_threads": self.num_threads,
+             "transport": self.transport}
+        if self.remote:
+            d.update(endpoints=list(self.endpoints) or ["inproc"],
+                     rpc_timeout_s=self.rpc_timeout_s,
+                     rpc_retries=self.rpc_retries,
+                     routing=self.routing)
+        return d
+
+
+__all__ = ["ServingConfig", "TRANSPORT_MODES", "ROUTING_MODES"]

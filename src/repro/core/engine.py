@@ -21,7 +21,6 @@ from __future__ import annotations
 
 import functools
 import threading
-import warnings
 from concurrent.futures import ThreadPoolExecutor
 from dataclasses import dataclass
 from typing import Dict, Optional
@@ -32,6 +31,7 @@ import numpy as np
 
 from repro.core.batchplan import (BatchPlan, BuildStage, PackStage,
                                   SelectStage)
+from repro.core.config import ServingConfig
 from repro.core.program import (ProgramDecision, execute,
                                 input_width_params, lower,
                                 required_adjacency, specialize)
@@ -59,37 +59,27 @@ class InferenceResult:
 class DecoupledEngine:
     """One engine instance = one (graph, model, batch-size) deployment."""
 
-    def __init__(self, graph: CSRGraph, cfg: GNNConfig, params=None, *,
-                 batch_size: int = 64, mode: str = "auto",
-                 impl: str = "xla", num_threads: int = 8, seed: int = 0,
-                 e_pad: Optional[int] = None,
-                 dedup_features: Optional[bool] = None,
-                 store: Optional[StorePolicy] = None):
+    def __init__(self, graph: CSRGraph, cfg: GNNConfig, params=None,
+                 config: Optional[ServingConfig] = None, **legacy):
+        """``config=ServingConfig(...)`` is the constructor surface; the
+        legacy per-kwarg spellings (batch_size=, impl=, store=, ...) are
+        routed through ``ServingConfig.from_kwargs`` and deprecated."""
+        if legacy:
+            config = ServingConfig.from_kwargs(base=config, **legacy)
+        elif config is None:
+            config = ServingConfig()
+        self.config = config
         self.graph, self.cfg = graph, cfg
-        self.batch_size = batch_size
-        self.num_threads = num_threads
-        self.impl = impl
-        if dedup_features is not None:
-            warnings.warn(
-                "dedup_features= is deprecated; pass "
-                "store=StorePolicy(features='packed') instead",
-                DeprecationWarning, stacklevel=2)
-        else:
-            dedup_features = False
-        if store is None:
-            # back-compat: dedup_features=True was the pre-store spelling
-            # of the packed shipping strategy
-            store = StorePolicy(features="packed") if dedup_features \
-                else StorePolicy()
-        elif dedup_features and store.features != "packed":
-            raise ValueError(
-                "dedup_features=True conflicts with store.features="
-                f"{store.features!r}; use StorePolicy(features='packed')")
+        self.batch_size = config.batch_size
+        self.num_threads = config.num_threads
+        self.impl = config.impl
+        mode = config.mode
+        store = config.store
         self.store_policy = store
         self.dedup_features = store.features == "packed"
         self.last_dedup_ratio = None
         n = cfg.receptive_field
-        self.e_pad = e_pad or default_edge_pad(graph, n)
+        self.e_pad = config.e_pad or default_edge_pad(graph, n)
         avg_edges = min(self.e_pad, n * float(graph.degrees.mean()))
         # compile the model through the lowering registry, then set each
         # op's mode mux from ITS kernel's FLOP model (mode="auto") or the
@@ -105,9 +95,10 @@ class DecoupledEngine:
         # (an all-sg aggregation path ships none — just the edge list)
         self.adj_keys = required_adjacency(self.program)
         if params is None:
-            params = init_gnn(cfg, jax.random.PRNGKey(seed))
+            params = init_gnn(cfg, jax.random.PRNGKey(config.seed))
         self.params = params
-        self.f_pad = _pad128(cfg.f_in) if impl == "pallas" else cfg.f_in
+        self.f_pad = _pad128(cfg.f_in) if self.impl == "pallas" \
+            else cfg.f_in
         if self.f_pad != cfg.f_in:
             # MXU alignment: zero-pad layer0 input-rows to match the padded
             # feature columns (padded features are zero, so this is exact).
@@ -120,27 +111,43 @@ class DecoupledEngine:
             self.params = dict(params, layer0=l0)
         self._infer = jax.jit(functools.partial(self._forward))
         self._fsource = build_feature_source(graph, store, self.f_pad)
-        self.nbr_cache = self._build_nbr_cache(store)
-        # Build-stage subgraph-row cache ("auto": rows are cached whenever
-        # neighborhoods are — hot traffic that re-selects also re-builds).
-        # Unlike node lists, one entry is ~2N^2 floats + the edge arrays,
-        # so the default capacity is BYTE-bounded (subgraph_budget_bytes),
-        # not inherited from nbr_capacity alone.
-        if store.cache_subgraph_rows:
-            cap = store.subgraph_capacity
-            if cap is None:
-                entry = 2 * n * n * 4 + 2 * n * 4 + 4 * self.e_pad * 4
-                cap = max(1, min(store.nbr_capacity,
-                                 store.subgraph_budget_bytes // entry))
-            self.sg_cache = SubgraphRowCache(cap)
-        else:
+        if config.remote:
+            # multi-host deployment: Select/Build run on graph hosts
+            # behind the transport (distributed.rpc); the nbr/row caches
+            # live WITH the graph over there, Pack + device execution
+            # stay here where the feature store and compiled program are
+            from repro.distributed.rpc import (RemoteSelectBuildStage,
+                                               build_host_pool)
+            self.nbr_cache = None
             self.sg_cache = None
-        # the host side as an explicit staged pipeline (Select -> Build ->
-        # Pack, see core.batchplan); prepare() runs the same stages
-        # serially, so the staged path is the monolithic one by
-        # construction
-        self.stages = [SelectStage(self), BuildStage(self),
-                       PackStage(self)]
+            self._host_pool = build_host_pool(config, graph=graph)
+            self.stages = [RemoteSelectBuildStage(
+                self, self._host_pool,
+                workers=config.rpc_concurrency), PackStage(self)]
+        else:
+            self._host_pool = None
+            self.nbr_cache = self._build_nbr_cache(store)
+            # Build-stage subgraph-row cache ("auto": rows are cached
+            # whenever neighborhoods are — hot traffic that re-selects
+            # also re-builds). Unlike node lists, one entry is ~2N^2
+            # floats + the edge arrays, so the default capacity is
+            # BYTE-bounded (subgraph_budget_bytes), not inherited from
+            # nbr_capacity alone.
+            if store.cache_subgraph_rows:
+                cap = store.subgraph_capacity
+                if cap is None:
+                    entry = 2 * n * n * 4 + 2 * n * 4 + 4 * self.e_pad * 4
+                    cap = max(1, min(store.nbr_capacity,
+                                     store.subgraph_budget_bytes // entry))
+                self.sg_cache = SubgraphRowCache(cap)
+            else:
+                self.sg_cache = None
+            # the host side as an explicit staged pipeline (Select ->
+            # Build -> Pack, see core.batchplan); prepare() runs the same
+            # stages serially, so the staged path is the monolithic one
+            # by construction
+            self.stages = [SelectStage(self), BuildStage(self),
+                           PackStage(self)]
         # auto-repin trigger state (StorePolicy.repin_every / _hit_floor)
         self._repin_auto = bool(store.repin_every or store.repin_hit_floor)
         self._repin_lock = threading.Lock()
@@ -161,7 +168,8 @@ class DecoupledEngine:
         # one pipeline per deployment (paper: one accelerator config, no
         # per-batch reconfiguration); lazily started on first use
         self.scheduler = PipelineScheduler(
-            self.stages, self.run_device, depth=3,
+            self.stages, self.run_device, depth=config.depth,
+            max_inflight=config.max_inflight,
             on_batch=self._on_batch_done if self._repin_auto else None)
         # graph-update streaming: CSRGraph.apply_edge_updates notifies us
         # so cached neighborhoods / resident rows never serve stale state
@@ -311,6 +319,13 @@ class DecoupledEngine:
         dropped (row-cache drops are visible in store_report())."""
         if hasattr(self._fsource, "refresh_features"):
             self._fsource.refresh_features(vertices)
+        if self._host_pool is not None:
+            # multi-host: the caches live on the graph hosts — broadcast
+            # the drop (best-effort; a dead host holds no live state)
+            from repro.store.nbr_cache import as_vertex_ids
+            results = self._host_pool.broadcast(
+                "invalidate", {"vertices": as_vertex_ids(vertices)})
+            return sum(r["dropped"] for r in results if r is not None)
         if self.sg_cache is not None:
             self.sg_cache.invalidate(vertices)
         if self.nbr_cache is None:
@@ -394,6 +409,15 @@ class DecoupledEngine:
             r["subgraph_cache"] = self.sg_cache.stats()
         if self._repin_auto:
             r["auto_repins"] = self.auto_repins
+        if self._host_pool is not None:
+            # multi-host: per-host health + the graph hosts' own cache
+            # stats (best-effort — a down host reports health only)
+            health = self._host_pool.report()
+            remote = self._host_pool.broadcast("report", None)
+            for h, rep in zip(health, remote):
+                if rep is not None:
+                    h["report"] = rep
+            r["graph_hosts"] = health
         return r
 
     def close(self):
@@ -404,6 +428,8 @@ class DecoupledEngine:
             self._repin_pool.shutdown(wait=True)
         for stage in self.stages:
             stage.close()
+        if self._host_pool is not None:
+            self._host_pool.close()
 
     def __enter__(self) -> "DecoupledEngine":
         return self

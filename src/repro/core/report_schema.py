@@ -1,0 +1,111 @@
+"""The one versioned key schema behind every reporting surface.
+
+Three surfaces grew three ad-hoc flat dicts — ``SchedulerStats.summary``,
+``engine.store_report`` and ``GNNServer.report`` — and the RPC counters
+would have made a fourth. This module pins ONE nested namespace that all
+of them emit, stamped with ``SCHEMA_VERSION`` so downstream dashboards
+can detect drift:
+
+  latency.*   wall-clock: t_wall / t_host / t_device / t_init (paper
+              Eq. 2 terms) and, per served model, the request
+              percentiles p50/p90/p99/mean/batch_mean/n
+  stages.*    host BatchPlan pipeline: per-stage wall totals ("times",
+              the software Fig. 3 breakdown), achieved overlap
+              fraction, batch count, Build-stage row-cache hit rate
+  store.*     transfer + cache accounting (paper t_load / t_pre):
+              bytes_shipped / bytes_dense / transfer_ratio /
+              cache_hit_rate / dedup_ratio, plus the engine's store
+              subsystem state (policy / features / nbr_cache /
+              subgraph_cache / auto_repins)
+  shards.*    sharded feature store only: per-shard link bytes +
+              max/mean balance
+  rpc.*       multi-host transport only: calls / bytes_out / bytes_in /
+              retries / timeouts / errors and the wall vs remote vs
+              wire time split of the remote stage
+
+Section builders take a ``SchedulerStats``-shaped object (duck-typed to
+avoid an import cycle with core.scheduler) and return plain dicts;
+absent subsystems return None and the section is omitted, never
+half-filled.
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+SCHEMA_VERSION = 1
+
+# documented key map (stable contract; bump SCHEMA_VERSION on change)
+SCHEMA = {
+    "latency": ("t_wall", "t_host", "t_device", "t_init",
+                "p50", "p90", "p99", "mean", "batch_mean", "n"),
+    "stages": ("times", "overlap", "batches", "build_hit_rate"),
+    "store": ("bytes_shipped", "bytes_dense", "transfer_ratio",
+              "cache_hit_rate", "dedup_ratio", "policy", "features",
+              "nbr_cache", "subgraph_cache", "auto_repins",
+              "graph_hosts"),
+    "shards": ("bytes", "balance"),
+    "rpc": ("calls", "bytes_out", "bytes_in", "retries", "timeouts",
+            "errors", "wall_s", "remote_s", "wire_s"),
+}
+
+
+def stages_section(stats) -> dict:
+    return {"times": {k: round(v, 6)
+                      for k, v in stats.stage_times.items()},
+            "overlap": round(stats.overlap_fraction, 3),
+            "batches": stats.n_batches,
+            "build_hit_rate": round(stats.build_hit_rate, 4)}
+
+
+def store_section(stats) -> dict:
+    """The scheduler-side transfer counters of ``store.*`` (the engine
+    merges its store-subsystem state into the same namespace)."""
+    return {"bytes_shipped": stats.bytes_shipped,
+            "bytes_dense": stats.bytes_dense,
+            "transfer_ratio": round(stats.transfer_ratio, 4),
+            "cache_hit_rate": round(stats.cache_hit_rate, 4),
+            "dedup_ratio": stats.last_dedup_ratio}
+
+
+def shards_section(stats) -> Optional[dict]:
+    if not stats.shard_bytes:
+        return None
+    return {"bytes": list(stats.shard_bytes),
+            "balance": round(stats.shard_balance, 4)}
+
+
+def rpc_section(stats) -> Optional[dict]:
+    if not stats.rpc_calls:
+        return None
+    return {"calls": stats.rpc_calls,
+            "bytes_out": stats.rpc_bytes_out,
+            "bytes_in": stats.rpc_bytes_in,
+            "retries": stats.rpc_retries,
+            "timeouts": stats.rpc_timeouts,
+            "errors": stats.rpc_errors,
+            "wall_s": round(stats.t_rpc_wall, 6),
+            "remote_s": round(stats.t_rpc_remote, 6),
+            "wire_s": round(stats.t_rpc_wire, 6)}
+
+
+def scheduler_summary(stats) -> dict:
+    """The full nested summary a ``SchedulerStats`` emits."""
+    d = {"schema_version": SCHEMA_VERSION,
+         "latency": {"t_wall": stats.t_wall,
+                     "t_host": stats.t_host_total,
+                     "t_device": stats.t_device_total,
+                     "t_init": stats.t_initialization},
+         "stages": stages_section(stats),
+         "store": store_section(stats)}
+    shards = shards_section(stats)
+    if shards is not None:
+        d["shards"] = shards
+    rpc = rpc_section(stats)
+    if rpc is not None:
+        d["rpc"] = rpc
+    return d
+
+
+__all__ = ["SCHEMA_VERSION", "SCHEMA", "scheduler_summary",
+           "stages_section", "store_section", "shards_section",
+           "rpc_section"]

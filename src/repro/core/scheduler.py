@@ -38,6 +38,8 @@ from typing import Any, Callable, Dict, List, Optional, Sequence, Union
 
 import jax
 
+from repro.core.report_schema import scheduler_summary
+
 
 @dataclass
 class SchedulerStats:
@@ -67,6 +69,19 @@ class SchedulerStats:
     # sharded feature store only: cumulative host->device bytes PER SHARD
     # (empty for unsharded deployments)
     shard_bytes: List[int] = field(default_factory=list)
+    # multi-host transport only (distributed.rpc): per-stage remote call
+    # accounting — wall is what the device host observed end-to-end,
+    # remote is the graph host's reported handler time, wire is local
+    # encode/decode; the gap between them is the link
+    rpc_calls: int = 0
+    rpc_bytes_out: int = 0
+    rpc_bytes_in: int = 0
+    rpc_retries: int = 0
+    rpc_timeouts: int = 0
+    rpc_errors: int = 0
+    t_rpc_wall: float = 0.0
+    t_rpc_remote: float = 0.0
+    t_rpc_wire: float = 0.0
 
     @property
     def overlap_fraction(self) -> float:
@@ -105,23 +120,10 @@ class SchedulerStats:
         return max(self.shard_bytes) / mean if mean > 0 else 1.0
 
     def summary(self) -> dict:
-        d = {"t_wall": self.t_wall, "t_host": self.t_host_total,
-             "t_device": self.t_device_total,
-             "t_init": self.t_initialization,
-             "overlap": round(self.overlap_fraction, 3),
-             "batches": self.n_batches,
-             "bytes_shipped": self.bytes_shipped,
-             "transfer_ratio": round(self.transfer_ratio, 4),
-             "cache_hit_rate": round(self.cache_hit_rate, 4),
-             "build_hit_rate": round(self.build_hit_rate, 4),
-             "dedup_ratio": self.last_dedup_ratio}
-        if self.stage_times:
-            d["stages"] = {k: round(v, 6)
-                           for k, v in self.stage_times.items()}
-        if self.shard_bytes:
-            d["shard_bytes"] = list(self.shard_bytes)
-            d["shard_balance"] = round(self.shard_balance, 4)
-        return d
+        """Nested ``latency.* / stages.* / store.* / shards.* / rpc.*``
+        summary under the ONE versioned key schema every reporting
+        surface shares (core.report_schema, SCHEMA_VERSION)."""
+        return scheduler_summary(self)
 
     def record(self, t_host: float, t_device: float):
         if not self.host_times:
@@ -401,6 +403,26 @@ class PipelineScheduler:
                                             - len(s.shard_bytes))
                 for i, b in enumerate(shard_bytes):
                     s.shard_bytes[i] += int(b)
+
+    def note_rpc_metrics(self, *, calls: int = 0, bytes_out: int = 0,
+                         bytes_in: int = 0, retries: int = 0,
+                         timeouts: int = 0, errors: int = 0,
+                         wall: float = 0.0, remote: float = 0.0,
+                         wire: float = 0.0):
+        """Accumulate one remote stage call's transport accounting
+        (distributed.rpc.RemoteSelectBuildStage) — safe from concurrent
+        stage workers, surfaced under ``rpc.*`` in summary()/report()."""
+        with self._lock:
+            s = self.stats
+            s.rpc_calls += int(calls)
+            s.rpc_bytes_out += int(bytes_out)
+            s.rpc_bytes_in += int(bytes_in)
+            s.rpc_retries += int(retries)
+            s.rpc_timeouts += int(timeouts)
+            s.rpc_errors += int(errors)
+            s.t_rpc_wall += float(wall)
+            s.t_rpc_remote += float(remote)
+            s.t_rpc_wire += float(wire)
 
     def flush(self, timeout: Optional[float] = None):
         """Block until every submitted batch has completed."""

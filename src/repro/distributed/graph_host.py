@@ -1,0 +1,209 @@
+"""Graph host: the process that owns a graph partition and its caches.
+
+The device host keeps the compiled ACK program and the feature store;
+the graph host keeps the CSR graph, the neighborhood cache, and the
+subgraph-row cache, and answers ``select_build`` calls by running the
+SAME ``SelectStage``/``BuildStage`` objects the in-process pipeline uses
+(core.batchplan) — so the remote path is the staged path by
+construction, and bitwise-identical to it.
+
+One service can answer for several registered models at once: stages are
+cached per (receptive field, alpha, eps, e_pad) signature while the two
+frontier caches are shared across them (entries key by that signature
+already — ``nbr_key``).
+
+Run standalone:
+
+    python -m repro.distributed.graph_host --dataset flickr \
+        --scale 0.01 --seed 0 --port 0
+
+prints ``GRAPH_HOST_LISTENING <host> <port>`` once ready (parents parse
+this to discover an ephemeral port) and serves until a ``shutdown`` RPC
+or SIGTERM.
+"""
+from __future__ import annotations
+
+import threading
+import time
+from types import SimpleNamespace
+from typing import Dict, Optional, Tuple
+
+import numpy as np
+
+from repro.core.batchplan import BatchPlan, BuildStage, SelectStage
+from repro.distributed import wire
+from repro.store.nbr_cache import NeighborhoodCache, SubgraphRowCache
+
+
+class _StagePair:
+    """Select+Build stations for one model signature, duck-typing the
+    slice of DecoupledEngine the stages read."""
+
+    def __init__(self, service: "GraphHostService", n: int, alpha: float,
+                 eps: float, e_pad: int):
+        eng = SimpleNamespace(
+            graph=service.graph,
+            cfg=SimpleNamespace(receptive_field=n, ppr_alpha=alpha,
+                                ppr_eps=eps),
+            num_threads=service.num_threads,
+            nbr_cache=service.nbr_cache,
+            sg_cache=service.sg_cache,
+            e_pad=e_pad)
+        self.select = SelectStage(eng)
+        self.build = BuildStage(eng)
+
+    def close(self):
+        self.select.close()
+
+
+class GraphHostService:
+    """RPC service owning one graph partition + its host-side caches.
+
+    Methods (all reachable through ``handle``):
+      select_build  targets -> node lists + SubgraphRows + cache counters
+      invalidate    vertex ids -> dropped cache entries (both caches)
+      report        cache stats + request counters
+      ping          liveness
+    """
+
+    def __init__(self, graph, *, num_threads: int = 8,
+                 nbr_cache_mode: str = "lru", nbr_capacity: int = 4096,
+                 cache_rows: bool = True, row_capacity: int = 1024,
+                 delay_s: float = 0.0):
+        self.graph = graph
+        self.num_threads = num_threads
+        # simulated one-way link latency (benchmarking only): lets a
+        # single-machine run measure how much of a known RTT the device
+        # host's pipelined remote stage hides
+        self.delay_s = delay_s
+        self.nbr_cache = (NeighborhoodCache(nbr_capacity)
+                          if nbr_cache_mode != "none" else None)
+        self.sg_cache = SubgraphRowCache(row_capacity) if cache_rows \
+            else None
+        self._pairs: Dict[Tuple, _StagePair] = {}
+        self._lock = threading.Lock()
+        self.requests = 0
+        self.targets_served = 0
+
+    def _pair(self, n: int, alpha: float, eps: float,
+              e_pad: int) -> _StagePair:
+        key = (int(n), float(alpha), float(eps), int(e_pad))
+        with self._lock:
+            pair = self._pairs.get(key)
+            if pair is None:
+                pair = _StagePair(self, *key)
+                self._pairs[key] = pair
+        return pair
+
+    # -- RPC methods ---------------------------------------------------------
+    def select_build(self, payload: dict) -> dict:
+        pair = self._pair(payload["n"], payload["alpha"], payload["eps"],
+                          payload["e_pad"])
+        plan = BatchPlan(targets=np.asarray(payload["targets"],
+                                            dtype=np.int64))
+        plan = pair.build.run(pair.select.run(plan))
+        with self._lock:
+            self.requests += 1
+            self.targets_served += len(plan.targets)
+        return {"node_lists": wire.node_lists_to_wire(plan.node_lists),
+                "rows": wire.rows_to_wire(plan.rows),
+                "nbr_hits": plan.nbr_hits,
+                "nbr_misses": plan.nbr_misses,
+                "build_hits": plan.build_hits,
+                "build_misses": plan.build_misses}
+
+    def invalidate(self, payload: dict) -> dict:
+        vs = np.asarray(payload["vertices"], dtype=np.int64)
+        dropped = 0
+        if self.sg_cache is not None:
+            dropped += self.sg_cache.invalidate(vs)
+        if self.nbr_cache is not None:
+            dropped += self.nbr_cache.invalidate(vs)
+        return {"dropped": dropped}
+
+    def report(self, payload: Optional[dict] = None) -> dict:
+        r = {"requests": self.requests,
+             "targets_served": self.targets_served,
+             "models": [list(k) for k in self._pairs]}
+        if self.nbr_cache is not None:
+            r["nbr_cache"] = self.nbr_cache.stats()
+        if self.sg_cache is not None:
+            r["subgraph_cache"] = self.sg_cache.stats()
+        return r
+
+    def ping(self, payload: Optional[dict] = None) -> dict:
+        return {"pong": True, "num_vertices": self.graph.num_vertices}
+
+    # -- dispatch ------------------------------------------------------------
+    _METHODS = ("select_build", "invalidate", "report", "ping")
+
+    def handle(self, request: dict) -> dict:
+        method = request.get("method")
+        if self.delay_s:
+            time.sleep(self.delay_s)
+        t0 = time.perf_counter()
+        if method not in self._METHODS:
+            return {"ok": False, "method": method,
+                    "error": f"unknown method {method!r}; "
+                             f"available: {list(self._METHODS)}",
+                    "error_type": "LookupError"}
+        try:
+            result = getattr(self, method)(request.get("payload"))
+        except Exception as e:                     # noqa: BLE001
+            return {"ok": False, "method": method, "error": str(e),
+                    "error_type": type(e).__name__}
+        return {"ok": True, "result": result,
+                "remote_s": time.perf_counter() - t0}
+
+    def close(self):
+        with self._lock:
+            pairs, self._pairs = list(self._pairs.values()), {}
+        for p in pairs:
+            p.close()
+
+
+def main(argv=None) -> int:
+    import argparse
+
+    from repro.distributed.rpc import GraphHostServer
+    from repro.graphs.synthetic import get_graph
+
+    ap = argparse.ArgumentParser(
+        description="Serve one graph partition's Select/Build stages "
+                    "over a SocketTransport endpoint.")
+    ap.add_argument("--host", default="127.0.0.1")
+    ap.add_argument("--port", type=int, default=0,
+                    help="0 = ephemeral; the chosen port is printed")
+    ap.add_argument("--dataset", default="flickr")
+    ap.add_argument("--scale", type=float, default=0.01)
+    ap.add_argument("--seed", type=int, default=0,
+                    help="must match the device host so both processes "
+                         "materialize the identical synthetic graph")
+    ap.add_argument("--num-threads", type=int, default=4)
+    ap.add_argument("--nbr-cache", default="lru",
+                    choices=("lru", "none"))
+    ap.add_argument("--nbr-capacity", type=int, default=4096)
+    ap.add_argument("--no-row-cache", action="store_true")
+    ap.add_argument("--row-capacity", type=int, default=1024)
+    ap.add_argument("--delay-ms", type=float, default=0.0,
+                    help="simulated link latency per call (benchmarks)")
+    args = ap.parse_args(argv)
+
+    graph = get_graph(args.dataset, scale=args.scale, seed=args.seed)
+    service = GraphHostService(
+        graph, num_threads=args.num_threads,
+        nbr_cache_mode=args.nbr_cache, nbr_capacity=args.nbr_capacity,
+        cache_rows=not args.no_row_cache, row_capacity=args.row_capacity,
+        delay_s=args.delay_ms / 1e3)
+    server = GraphHostServer(service, host=args.host, port=args.port)
+    print(f"GRAPH_HOST_LISTENING {server.host} {server.port}",
+          flush=True)
+    try:
+        server.wait()
+    except KeyboardInterrupt:
+        server.close()
+    return 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

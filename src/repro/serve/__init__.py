@@ -1,2 +1,7 @@
 # GNN serving: multi-model streaming runtime over DecoupledEngines.
+from repro.core.config import ServingConfig
+from repro.core.report_schema import SCHEMA, SCHEMA_VERSION
 from repro.serve.gnn_server import GNNServer, Request, ServerStats
+
+__all__ = ["GNNServer", "Request", "ServerStats", "ServingConfig",
+           "SCHEMA", "SCHEMA_VERSION"]

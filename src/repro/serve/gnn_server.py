@@ -25,8 +25,12 @@ from typing import Dict, List, Optional
 
 import numpy as np
 
+from repro.core.config import ServingConfig
 from repro.core.dse import DSEPlan, TPUSpec, explore, validate_models
 from repro.core.engine import DecoupledEngine
+from repro.core.report_schema import (SCHEMA_VERSION, rpc_section,
+                                      shards_section, stages_section,
+                                      store_section)
 
 DEFAULT_MODEL = "default"
 
@@ -155,34 +159,30 @@ class _ModelLane:
         self.engine.scheduler.flush(timeout=60)
 
     def report(self) -> dict:
-        r = dict(self.stats.percentiles())
+        """This lane's slice of the versioned report schema
+        (core.report_schema): latency.* request percentiles, stages.*
+        pipeline breakdown, store.* transfer + subsystem state, and —
+        when the deployment shards or goes multi-host — shards.*/rpc.*."""
         sched = self.engine.scheduler.stats
-        r["overlap"] = round(sched.overlap_fraction, 3)
-        r["sched_batches"] = sched.n_batches
-        r["kind"] = self.engine.cfg.kind
-        # compiled ACK program: per-op mode mux of this lane's datapath
-        r["ack"] = {"mode": self.engine.mode,
-                    "summary": self.engine.decision.summary,
-                    "ops": [{"site": d.site, "op": d.op, "mode": d.mode}
-                            for d in self.engine.decision]}
-        # host BatchPlan pipeline: per-stage wall time totals (the
-        # software Fig. 3 breakdown) + the Build stage's row-cache outcome
-        if sched.stage_times:
-            r["stage_times"] = {k: round(v, 6) for k, v
-                                in list(sched.stage_times.items())}
-        r["build_hit_rate"] = round(sched.build_hit_rate, 4)
-        # store subsystem: transfer + cache observability (paper t_load /
-        # t_pre — what the two-level store saved this lane)
-        r["bytes_shipped"] = sched.bytes_shipped
-        r["transfer_ratio"] = round(sched.transfer_ratio, 4)
-        r["cache_hit_rate"] = round(sched.cache_hit_rate, 4)
-        r["dedup_ratio"] = sched.last_dedup_ratio
-        if sched.shard_bytes:
-            # sharded feature store: per-shard link bytes + skew (1.0 =
-            # perfectly even traffic across shards)
-            r["shard_bytes"] = list(sched.shard_bytes)
-            r["shard_balance"] = round(sched.shard_balance, 4)
-        r["store"] = self.engine.store_report()
+        r = {"kind": self.engine.cfg.kind,
+             # compiled ACK program: per-op mode mux of this lane
+             "ack": {"mode": self.engine.mode,
+                     "summary": self.engine.decision.summary,
+                     "ops": [{"site": d.site, "op": d.op, "mode": d.mode}
+                             for d in self.engine.decision]},
+             "latency": dict(self.stats.percentiles()),
+             "stages": stages_section(sched),
+             # store.*: the scheduler's transfer counters (paper t_load)
+             # merged with the engine's store-subsystem state — one
+             # namespace, no fourth ad-hoc dict
+             "store": {**store_section(sched),
+                       **self.engine.store_report()}}
+        shards = shards_section(sched)
+        if shards is not None:
+            r["shards"] = shards
+        rpc = rpc_section(sched)
+        if rpc is not None:
+            r["rpc"] = rpc
         return r
 
 
@@ -201,10 +201,13 @@ class GNNServer:
     """
 
     def __init__(self, engine: Optional[DecoupledEngine] = None,
-                 max_wait_s: float = 0.005, *,
+                 max_wait_s: Optional[float] = None, *,
                  plan: Optional[DSEPlan] = None,
-                 spec: Optional[TPUSpec] = None):
-        self.max_wait_s = max_wait_s
+                 spec: Optional[TPUSpec] = None,
+                 config: Optional[ServingConfig] = None):
+        self.config = config or ServingConfig()
+        self.max_wait_s = self.config.max_wait_s if max_wait_s is None \
+            else max_wait_s
         self.spec = spec or TPUSpec()
         self.plan = plan
         self._plan_fixed = plan is not None
@@ -214,9 +217,27 @@ class GNNServer:
             self.register(DEFAULT_MODEL, engine)
 
     # -- model registry ------------------------------------------------------
-    def register(self, name: str, engine: DecoupledEngine) -> "GNNServer":
+    def register(self, name: str,
+                 engine: Optional[DecoupledEngine] = None, *,
+                 graph=None, cfg=None, params=None,
+                 config: Optional[ServingConfig] = None) -> "GNNServer":
+        """Admit a model: pass a constructed ``engine``, or pass
+        ``graph=`` + ``cfg=`` (+ optional ``config=ServingConfig(...)``,
+        defaulting to the server's) and the server builds the engine —
+        the config-first spelling of multi-model serving."""
         if name in self._lanes:
             raise ValueError(f"model {name!r} already registered")
+        if engine is None:
+            if graph is None or cfg is None:
+                raise TypeError(
+                    "register() needs either an engine or graph= + cfg= "
+                    "(+ optional config=ServingConfig(...))")
+            engine = DecoupledEngine(graph, cfg, params=params,
+                                     config=config or self.config)
+        elif config is not None:
+            raise TypeError(
+                "config= applies only when the server builds the engine "
+                "(omit engine=, pass graph= and cfg=)")
         cfgs = [ln.engine.cfg for ln in self._lanes.values()] + [engine.cfg]
         if self._plan_fixed:
             validate_models(self.plan, [engine.cfg], self.spec)
@@ -295,11 +316,14 @@ class GNNServer:
         return agg
 
     def report(self) -> dict:
-        """Per-model p50/p90/p99 + overlap fraction under the shared plan."""
+        """Per-model latency.*/stages.*/store.*(/shards.*/rpc.*) under
+        the shared plan — the versioned report schema
+        (core.report_schema.SCHEMA_VERSION)."""
         per_model = {n: ln.report() for n, ln in self._lanes.items()}
-        return {"models": per_model,
+        return {"schema_version": SCHEMA_VERSION,
+                "models": per_model,
                 "plan": {"block_f": self.plan.block_f,
                          "c_core": self.plan.c_core,
                          "buffer_depth": self.plan.buffer_depth,
                          "vmem_used": self.plan.vmem_used},
-                "aggregate": self.stats.percentiles()}
+                "aggregate": {"latency": self.stats.percentiles()}}

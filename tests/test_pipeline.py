@@ -116,12 +116,13 @@ class TestStagedEqualsMonolithic:
                              num_threads=1) as eng:
             eng.infer(TARGETS, overlap=True)
             s = eng.scheduler.stats.summary()
-            assert set(s["stages"]) == {"select", "build", "pack"}
-            assert all(v > 0 for v in s["stages"].values())
-            assert "build_hit_rate" in s
+            times = s["stages"]["times"]
+            assert set(times) == {"select", "build", "pack"}
+            assert all(v > 0 for v in times.values())
+            assert "build_hit_rate" in s["stages"]
             # per-stage sums make up the recorded host time
-            assert sum(s["stages"].values()) == pytest.approx(
-                s["t_host"], rel=0.05)
+            assert sum(times.values()) == pytest.approx(
+                s["latency"]["t_host"], rel=0.05)
 
     def test_plan_artifact_fields(self, graph):
         """plan() exposes the full BatchPlan: every stage's output is
@@ -428,7 +429,7 @@ class TestSGCLowering:
                                               standalone[i])
             rep = srv.report()
             assert rep["models"]["sgc"]["kind"] == "sgc"
-            assert "stage_times" in rep["models"]["sgc"]
+            assert "times" in rep["models"]["sgc"]["stages"]
         finally:
             srv.stop()
             e_g.close()

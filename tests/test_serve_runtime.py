@@ -188,9 +188,10 @@ class TestMultiModelServer:
         rep = srv.report()
         for kind in ("gcn", "sage"):
             m = rep["models"][kind]
-            assert m["n"] == 32
-            assert m["p50"] <= m["p90"] <= m["p99"]
-            assert 0.0 <= m["overlap"] <= 1.0
+            assert m["latency"]["n"] == 32
+            assert m["latency"]["p50"] <= m["latency"]["p90"] \
+                <= m["latency"]["p99"]
+            assert 0.0 <= m["stages"]["overlap"] <= 1.0
         assert rep["plan"]["block_f"] % 128 == 0
         for e in engines.values():
             e.close()

@@ -4,6 +4,7 @@ pad_targets coverage the subsystem leans on."""
 import numpy as np
 import pytest
 
+from repro.core.config import ServingConfig
 from repro.core.engine import DecoupledEngine
 from repro.core.ini import ini_batch
 from repro.core.subgraph import batch_from_node_lists, packed_features
@@ -43,11 +44,16 @@ class TestStorePolicy:
         with pytest.raises(ValueError):       # pins need pinned mode
             StorePolicy(nbr_cache="lru", pinned_targets=(1, 2))
 
-    def test_dedup_features_maps_to_packed(self, graph, cfg):
-        # deprecated spelling: still maps to the packed strategy, but warns
-        with pytest.warns(DeprecationWarning, match="dedup_features"):
-            eng = DecoupledEngine(graph, cfg, batch_size=8,
-                                  dedup_features=True)
+    def test_dedup_features_removed(self, graph, cfg):
+        # the long-deprecated pre-store spelling is gone; the error names
+        # the replacement so old callers know where to go
+        with pytest.raises(TypeError, match="dedup_features.*packed"):
+            DecoupledEngine(graph, cfg, batch_size=8,
+                            dedup_features=True)
+        # the replacement spelling still exposes the back-compat flag
+        eng = DecoupledEngine(
+            graph, cfg, config=ServingConfig(
+                batch_size=8, store=StorePolicy(features="packed")))
         assert eng.store_policy.features == "packed"
         assert eng.dedup_features
         eng.close()
@@ -311,10 +317,11 @@ class TestServerReport:
         srv.stop()
         m = srv.report()["models"]["default"]
         for key in ("bytes_shipped", "transfer_ratio", "cache_hit_rate",
-                    "dedup_ratio", "store"):
-            assert key in m
-        assert m["bytes_shipped"] > 0
-        assert m["transfer_ratio"] < 0.5          # resident: index-only
+                    "dedup_ratio", "features", "nbr_cache"):
+            assert key in m["store"]
+        assert m["store"]["bytes_shipped"] > 0
+        # resident store ships indices, not rows
+        assert m["store"]["transfer_ratio"] < 0.5
         assert m["store"]["features"]["strategy"] == "resident"
         assert m["store"]["nbr_cache"]["capacity"] == 4096
         eng.close()
