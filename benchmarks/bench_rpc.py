@@ -28,7 +28,16 @@ Deployments of the same (graph, model, params):
 
 Appends ``results/BENCH_rpc.json``.
 
+``--trace out.json`` additionally runs a TRACED socket deployment
+against a live graph-host subprocess and exports a Perfetto-loadable
+chrome trace: the graph host's remote.select/remote.build spans are
+stitched (after ping-based clock-offset correction) INSIDE the client's
+select_build rpc span — the two-process timeline the paper's Fig. 7
+overlap claim needs. The run asserts bitwise equality vs local, zero
+chrome-trace validation problems, and zero containment violations.
+
     python benchmarks/bench_rpc.py [--smoke] [--requests N] [--rtt-ms R]
+    python benchmarks/bench_rpc.py --trace results/trace.json
 """
 from __future__ import annotations
 
@@ -218,12 +227,76 @@ def run(requests: int = 2048, batch_size: int = 8, scale: float = 0.01,
     return payload
 
 
+def run_traced(out_path: str = "results/trace.json",
+               requests: int = 64, batch_size: int = 8,
+               scale: float = 0.004, receptive_field: int = 16,
+               seed: int = 0, dataset: str = "flickr") -> dict:
+    """Two-process traced run: device host here, graph host in a
+    subprocess over TCP. Exports the stitched chrome trace to
+    ``out_path`` and gates on bitwise equality, trace validity, and
+    remote-span containment."""
+    import jax
+
+    from repro.gnn.model import init_gnn
+    from repro.obs import TraceConfig, containment, validate_chrome_trace
+
+    g = get_graph(dataset, scale=scale, seed=seed)
+    cfg = GNNConfig(kind="gcn", n_layers=2,
+                    receptive_field=receptive_field, f_in=g.feature_dim)
+    params = init_gnn(cfg, jax.random.PRNGKey(seed))
+    traffic = zipf_traffic(g, requests, 1.1, seed + 1)
+    store = StorePolicy(features="resident", nbr_cache="lru",
+                        nbr_capacity=1024)
+    base = ServingConfig(batch_size=batch_size, num_threads=2,
+                         store=store, rpc_timeout_s=300.0)
+    with DecoupledEngine(g, cfg, params=params, config=base) as eng:
+        ref = eng.infer(traffic, overlap=False).embeddings
+    proc, ep = spawn_graph_host(dataset, scale, seed)
+    try:
+        sc = dataclasses.replace(base, transport="socket",
+                                 endpoints=(ep,),
+                                 trace=TraceConfig())
+        with DecoupledEngine(g, cfg, params=params, config=sc) as eng:
+            out = eng.infer(traffic).embeddings
+            spans = eng.tracer.export_spans()
+            rep = eng.trace_report()
+            tree = eng.export_trace(out_path)
+    finally:
+        proc.kill()
+        proc.wait(timeout=10)
+    np.testing.assert_array_equal(ref, out)
+    remote = [s for s in spans if s["host"].startswith("graph-host")]
+    assert remote, "no remote spans stitched from the graph host"
+    problems = validate_chrome_trace(tree)
+    assert problems == [], f"chrome trace invalid: {problems[:5]}"
+    violations = containment(spans, "select_build", remote[0]["host"])
+    assert violations == [], (
+        f"remote spans escape their rpc span after clock correction: "
+        f"{violations[:3]}")
+    sync = rep["clock_sync"][ep]
+    print(f"traced socket run: {rep['tickets_traced']} batches, "
+          f"{rep['spans']} spans ({len(remote)} remote from {ep}, "
+          f"offset {sync['offset_s'] * 1e3:+.3f}ms "
+          f"rtt {sync['rtt_s'] * 1e3:.3f}ms)")
+    print(f"bitwise vs local OK; containment OK; chrome trace valid "
+          f"-> {out_path} (open in https://ui.perfetto.dev)")
+    return {"trace_path": out_path, "spans": rep["spans"],
+            "remote_spans": len(remote),
+            "tickets_traced": rep["tickets_traced"],
+            "clock_sync": sync}
+
+
 def run_suite(quick: bool = True):
-    """benchmarks.run harness entry (quick == CI rpc-smoke shape)."""
+    """benchmarks.run harness entry (quick == CI rpc-smoke shape). Both
+    shapes finish with the traced two-process run: CI uploads the
+    exported results/trace.json as an artifact."""
     if quick:
-        return run(requests=512, batch_size=8, scale=0.004,
-                   receptive_field=16)
-    return run()
+        payload = run(requests=512, batch_size=8, scale=0.004,
+                      receptive_field=16)
+    else:
+        payload = run()
+    payload["trace"] = run_traced()
+    return payload
 
 
 if __name__ == "__main__":
@@ -235,8 +308,14 @@ if __name__ == "__main__":
                     help="simulated link RTT injected at the graph host")
     ap.add_argument("--smoke", action="store_true",
                     help="tiny graph + few requests (CI rpc-smoke gate)")
+    ap.add_argument("--trace", metavar="PATH", default=None,
+                    help="ONLY run the traced two-process socket "
+                         "deployment and export the stitched chrome "
+                         "trace to PATH")
     a = ap.parse_args()
-    if a.smoke:
+    if a.trace:
+        run_traced(out_path=a.trace)
+    elif a.smoke:
         run_suite(quick=True)
     else:
         run(requests=a.requests, batch_size=a.batch_size, zipf_a=a.zipf,

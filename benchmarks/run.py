@@ -15,8 +15,9 @@ import traceback
 
 from benchmarks import (bench_eq1_loadbalance, bench_fig3_breakdown,
                         bench_fig8_latency, bench_fig10_batch,
-                        bench_kernels, bench_pipeline, bench_program,
-                        bench_rpc, bench_serve_multimodel, bench_shard,
+                        bench_kernels, bench_obs, bench_pipeline,
+                        bench_program, bench_rpc,
+                        bench_serve_multimodel, bench_shard,
                         bench_store, bench_table5_load, bench_table6_ini)
 
 SUITES = {
@@ -33,6 +34,7 @@ SUITES = {
     "shard": bench_shard.run_suite,
     "pipeline": bench_pipeline.run_suite,
     "rpc": bench_rpc.run_suite,
+    "obs": bench_obs.run_suite,
 }
 
 

@@ -145,6 +145,11 @@ class SelectStage(PlanStage):
         plan.node_lists = [found[t] for t in targets]
         plan.nbr_hits = len(found) - len(missing)
         plan.nbr_misses = len(missing)
+        tr = eng.tracer
+        if tr is not None:           # annotate this batch's select span
+            tr.annotate(nbr_hits=plan.nbr_hits,
+                        nbr_misses=plan.nbr_misses,
+                        n_targets=len(targets))
         return plan
 
     def close(self):
@@ -192,6 +197,10 @@ class BuildStage(PlanStage):
         plan.rows = [built[t] for t in targets]
         plan.build_hits = hits
         plan.build_misses = len(built) - hits
+        tr = eng.tracer
+        if tr is not None:           # annotate this batch's build span
+            tr.annotate(build_hits=hits,
+                        build_misses=plan.build_misses)
         return plan
 
 
@@ -234,4 +243,7 @@ class PackStage(PlanStage):
             dedup_ratio=dedup,
             shard_bytes=per_shard(payload) if per_shard else None)
         plan.device = d
+        tr = eng.tracer
+        if tr is not None:           # annotate this batch's pack span
+            tr.annotate(bytes_shipped=shipped, bytes_dense=dense)
         return plan

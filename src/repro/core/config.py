@@ -61,8 +61,17 @@ class ServingConfig:
     rpc_retries: int = 2               # extra attempts on OTHER hosts
     rpc_concurrency: int = 4           # in-flight calls per deployment
     routing: str = "round_robin"       # round_robin | affine
+    # observability: None (default) = tracing off, zero-cost; a
+    # TraceConfig enables per-ticket spans + histograms (obs package)
+    trace: Optional[object] = None
 
     def __post_init__(self):
+        if self.trace is not None:
+            from repro.obs.trace import TraceConfig
+            if not isinstance(self.trace, TraceConfig):
+                raise TypeError(
+                    f"trace must be an obs.TraceConfig or None, got "
+                    f"{type(self.trace).__name__}")
         if not isinstance(self.store, StorePolicy):
             raise TypeError(
                 f"store must be a StorePolicy, got "
@@ -142,6 +151,8 @@ class ServingConfig:
              "impl": self.impl, "depth": self.depth,
              "num_threads": self.num_threads,
              "transport": self.transport}
+        if self.trace is not None:
+            d["trace"] = self.trace.describe()
         if self.remote:
             d.update(endpoints=list(self.endpoints) or ["inproc"],
                      rpc_timeout_s=self.rpc_timeout_s,

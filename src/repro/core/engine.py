@@ -70,6 +70,17 @@ class DecoupledEngine:
             config = ServingConfig()
         self.config = config
         self.graph, self.cfg = graph, cfg
+        # observability (off by default, zero-cost when off: every site
+        # downstream guards on ``tracer is None``)
+        if config.trace is not None:
+            from repro.obs.calib import CalibrationTable
+            from repro.obs.trace import Tracer
+            self.tracer = Tracer(config.trace)
+            self._calib = CalibrationTable()
+        else:
+            self.tracer = None
+            self._calib = None
+        self._calib_count = 0
         self.batch_size = config.batch_size
         self.num_threads = config.num_threads
         self.impl = config.impl
@@ -124,6 +135,12 @@ class DecoupledEngine:
             self.stages = [RemoteSelectBuildStage(
                 self, self._host_pool,
                 workers=config.rpc_concurrency), PackStage(self)]
+            if self.tracer is not None:
+                # ping-based clock-offset estimate per graph host, so
+                # their spans stitch onto this process's timeline
+                from repro.distributed.rpc import estimate_clock_offsets
+                self.tracer.clock_sync = estimate_clock_offsets(
+                    self._host_pool)
         else:
             self._host_pool = None
             self.nbr_cache = self._build_nbr_cache(store)
@@ -170,7 +187,8 @@ class DecoupledEngine:
         self.scheduler = PipelineScheduler(
             self.stages, self.run_device, depth=config.depth,
             max_inflight=config.max_inflight,
-            on_batch=self._on_batch_done if self._repin_auto else None)
+            on_batch=self._on_batch_done if self._repin_auto else None,
+            tracer=self.tracer)
         # graph-update streaming: CSRGraph.apply_edge_updates notifies us
         # so cached neighborhoods / resident rows never serve stale state
         if hasattr(graph, "register_listener"):
@@ -268,12 +286,34 @@ class DecoupledEngine:
             device_batch = device_batch.device
         db = dict(device_batch)
         src = self._fsource
+        tr = self.tracer
         if all(k in db for k in src.payload_keys):
-            feats = src.device_feats({k: db.pop(k)
-                                      for k in src.payload_keys})
+            payload = {k: db.pop(k) for k in src.payload_keys}
+            if tr is None:
+                feats = src.device_feats(payload)
+            else:
+                # child of the scheduler's "device" span (thread-local
+                # parent); no-ops when this batch is untraced
+                with tr.span("store.gather", cat="store",
+                             store=src.name):
+                    feats = src.device_feats(payload)
         else:       # externally built dense batch (e.g. device_batch())
             feats = db["feats"]
         db["feats"] = self._pad_feature_dim(feats)
+        if tr is not None and tr.config.calibrate_every \
+                and tr.current() is not None:
+            # sampled instrumented eager per-op pass (obs.calib): its
+            # outputs are DISCARDED — the jitted result below is what
+            # gets served, so outputs stay bitwise-identical
+            self._calib_count += 1
+            if self._calib_count % tr.config.calibrate_every == 0:
+                from repro.obs.calib import run_instrumented
+                try:
+                    with tr.span("calibrate", cat="calib"):
+                        run_instrumented(self.program, self.params, db,
+                                         self.impl, self._calib)
+                except Exception:    # calibration must never break
+                    pass             # serving
         return self._infer(self.params, db)
 
     # -- end-to-end ----------------------------------------------------------
@@ -419,6 +459,29 @@ class DecoupledEngine:
                     h["report"] = rep
             r["graph_hosts"] = health
         return r
+
+    def trace_report(self) -> dict:
+        """Observability state of this deployment: tracing counters,
+        per-span-name latency histograms, flight-recorder summary,
+        clock-sync estimates, and the per-op calibration table (the
+        ``trace.*`` schema section). ``{"enabled": False}`` when the
+        deployment was built without ``ServingConfig(trace=...)``."""
+        if self.tracer is None:
+            return {"enabled": False}
+        from repro.core.report_schema import trace_section
+        return trace_section(self.tracer, self._calib)
+
+    def export_trace(self, path: str) -> dict:
+        """Write this deployment's finished spans (export ring + flight
+        recorder trees) as a Perfetto-loadable chrome trace."""
+        if self.tracer is None:
+            raise ValueError(
+                "tracing is off; construct the engine with "
+                "ServingConfig(trace=TraceConfig(...)) to record spans")
+        from repro.obs.export import write_chrome_trace
+        return write_chrome_trace(path, self.tracer.export_spans(),
+                                  metadata={"config":
+                                            self.config.describe()})
 
     def close(self):
         if hasattr(self.graph, "unregister_listener"):

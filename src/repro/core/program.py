@@ -704,9 +704,14 @@ def _step_attention_softmax(op: AttentionSoftmax, impl: str):
     return step
 
 
-def _compile_section(seq: Sequence[AckOp], impl: str):
-    """Lower an op stream to step closures; under Pallas, peephole-fuse
-    dense Aggregate[+Residual]+Transform groups into one kernel call."""
+def compile_steps(seq: Sequence[AckOp], impl: str):
+    """Lower an op stream to labeled step closures: a list of
+    ``(ops, step)`` pairs where ``ops`` is the tuple of AckOps the step
+    executes (a singleton, or the Aggregate[+Residual]+Transform group a
+    Pallas peephole fused into one kernel call). ``_compile_section``
+    strips the labels for the jitted execution path; ``obs.calib`` keeps
+    them to time each step of a sampled eager pass — the per-op measured
+    latencies the ROADMAP's measured-cost dispatch needs."""
     steps = []
     i = 0
     while i < len(seq):
@@ -730,22 +735,30 @@ def _compile_section(seq: Sequence[AckOp], impl: str):
                 res, j = seq[j], j + 1
             if (j < len(seq) and isinstance(seq[j], Transform)
                     and seq[j].src == op.out):
-                steps.append(_fused_step(op, res, seq[j]))
+                group = tuple(o for o in (op, res, seq[j])
+                              if o is not None)
+                steps.append((group, _fused_step(op, res, seq[j])))
                 i = j + 1
                 continue
         if isinstance(op, Aggregate):
-            steps.append(_step_aggregate(op, impl))
+            steps.append(((op,), _step_aggregate(op, impl)))
         elif isinstance(op, Residual):
-            steps.append(_step_residual(op))
+            steps.append(((op,), _step_residual(op)))
         elif isinstance(op, Transform):
-            steps.append(_step_transform(op, impl))
+            steps.append(((op,), _step_transform(op, impl)))
         elif isinstance(op, AttentionScore):
-            steps.append(_step_attention_score(op))
+            steps.append(((op,), _step_attention_score(op)))
         elif isinstance(op, AttentionSoftmax):
-            steps.append(_step_attention_softmax(op, impl))
+            steps.append(((op,), _step_attention_softmax(op, impl)))
         else:
             raise TypeError(f"op {op!r} is not a layer op")
         i += 1
+    return steps
+
+
+def _compile_section(seq: Sequence[AckOp], impl: str):
+    """Unlabeled section lowering for the jitted execution path."""
+    steps = [step for _, step in compile_steps(seq, impl)]
 
     def apply(p, h, batch, h0=None):
         # "h0" is the propagation ENTRY state: the layer input for

@@ -22,22 +22,35 @@ can detect drift:
   rpc.*       multi-host transport only: calls / bytes_out / bytes_in /
               retries / timeouts / errors and the wall vs remote vs
               wire time split of the remote stage
+  trace.*     observability (ServingConfig(trace=...)): tracing config +
+              span/ticket counters, per-span-name latency histograms,
+              the flight recorder's slowest-batch summary, per-endpoint
+              clock-sync estimates, and the per-op calibration table
 
 Section builders take a ``SchedulerStats``-shaped object (duck-typed to
 avoid an import cycle with core.scheduler) and return plain dicts;
 absent subsystems return None and the section is omitted, never
 half-filled.
+
+Version history:
+  1  initial five-section namespace (latency/stages/store/shards/rpc)
+  2  observability: new optional ``trace`` section (emitted only on
+     traced deployments), and ``latency.hist`` — the serialized
+     log-bucketed request-latency histogram (obs.hist.LogHistogram
+     .to_dict()) whose p50/p90/p99 now come from fixed-memory buckets
+     instead of unbounded raw lists. Existing keys are unchanged, so
+     v1 consumers keep working; the bump flags the additive keys.
 """
 from __future__ import annotations
 
 from typing import Optional
 
-SCHEMA_VERSION = 1
+SCHEMA_VERSION = 2
 
 # documented key map (stable contract; bump SCHEMA_VERSION on change)
 SCHEMA = {
     "latency": ("t_wall", "t_host", "t_device", "t_init",
-                "p50", "p90", "p99", "mean", "batch_mean", "n"),
+                "p50", "p90", "p99", "mean", "batch_mean", "n", "hist"),
     "stages": ("times", "overlap", "batches", "build_hit_rate"),
     "store": ("bytes_shipped", "bytes_dense", "transfer_ratio",
               "cache_hit_rate", "dedup_ratio", "policy", "features",
@@ -46,6 +59,10 @@ SCHEMA = {
     "shards": ("bytes", "balance"),
     "rpc": ("calls", "bytes_out", "bytes_in", "retries", "timeouts",
             "errors", "wall_s", "remote_s", "wire_s"),
+    "trace": ("enabled", "sample_every", "ring_capacity", "flight_k",
+              "calibrate_every", "tickets_traced", "spans",
+              "spans_dropped", "remote_spans", "host", "hists",
+              "flight", "clock_sync", "calibration"),
 }
 
 
@@ -88,6 +105,17 @@ def rpc_section(stats) -> Optional[dict]:
             "wire_s": round(stats.t_rpc_wire, 6)}
 
 
+def trace_section(tracer, calibration=None) -> Optional[dict]:
+    """The ``trace.*`` section of a traced deployment (None when tracing
+    is off — the section is omitted, keeping v1 consumers byte-stable)."""
+    if tracer is None:
+        return None
+    d = tracer.report()
+    if calibration is not None and len(calibration):
+        d["calibration"] = calibration.to_dict()
+    return d
+
+
 def scheduler_summary(stats) -> dict:
     """The full nested summary a ``SchedulerStats`` emits."""
     d = {"schema_version": SCHEMA_VERSION,
@@ -108,4 +136,4 @@ def scheduler_summary(stats) -> dict:
 
 __all__ = ["SCHEMA_VERSION", "SCHEMA", "scheduler_summary",
            "stages_section", "store_section", "shards_section",
-           "rpc_section"]
+           "rpc_section", "trace_section"]

@@ -32,6 +32,7 @@ from __future__ import annotations
 import queue
 import threading
 import time
+from collections import deque
 from concurrent.futures import Future, ThreadPoolExecutor
 from dataclasses import dataclass, field
 from typing import Any, Callable, Dict, List, Optional, Sequence, Union
@@ -39,6 +40,11 @@ from typing import Any, Callable, Dict, List, Optional, Sequence, Union
 import jax
 
 from repro.core.report_schema import scheduler_summary
+
+# per-batch raw-timing window: the newest RECENT_TIMES host/device times
+# are kept verbatim (recent forensics); older ones roll off, so stats
+# memory is O(1) in batch count (cumulative totals stay exact)
+RECENT_TIMES = 512
 
 
 @dataclass
@@ -48,8 +54,10 @@ class SchedulerStats:
     t_device_total: float = 0.0      # sum of per-batch device times
     t_initialization: float = 0.0    # host prep of the FIRST batch
     n_batches: int = 0
-    host_times: List[float] = field(default_factory=list)
-    device_times: List[float] = field(default_factory=list)
+    host_times: "deque" = field(
+        default_factory=lambda: deque(maxlen=RECENT_TIMES))
+    device_times: "deque" = field(
+        default_factory=lambda: deque(maxlen=RECENT_TIMES))
     # per-stage host wall time totals (staged pipelines only; the
     # one-stage host_fn spelling accumulates under "host") — the paper's
     # Fig. 3 breakdown of the host budget
@@ -126,7 +134,7 @@ class SchedulerStats:
         return scheduler_summary(self)
 
     def record(self, t_host: float, t_device: float):
-        if not self.host_times:
+        if self.n_batches == 0:
             self.t_initialization = t_host
         self.host_times.append(t_host)
         self.device_times.append(t_device)
@@ -149,7 +157,8 @@ class StreamTicket:
     """
 
     __slots__ = ("item", "seq", "on_done", "t_submit", "t_host", "t_device",
-                 "stage_times", "output", "error", "_event", "_host_future")
+                 "stage_times", "output", "error", "trace", "_event",
+                 "_host_future")
 
     def __init__(self, item: Any, seq: int,
                  on_done: Optional[Callable] = None):
@@ -162,6 +171,7 @@ class StreamTicket:
         self.stage_times: Dict[str, float] = {}
         self.output: Any = None
         self.error: Optional[BaseException] = None
+        self.trace = None            # obs.TraceContext when sampled
         self._event = threading.Event()
         self._host_future = None
 
@@ -198,6 +208,10 @@ class PipelineScheduler:
                       fired on the dispatcher thread after stats are
                       recorded (the engine's auto-repin trigger point);
                       exceptions are swallowed.
+    tracer          -> optional ``obs.Tracer``; sampled tickets get a
+                      TraceContext and every stage/device step runs
+                      under a span. None (default) = tracing off —
+                      each hot-path site pays one ``is None`` test.
 
     Lifecycle: lazily started on first submit/run; ``close()`` drains and
     tears down threads (stage objects themselves are owned — and closed —
@@ -208,7 +222,8 @@ class PipelineScheduler:
     def __init__(self, host: Union[Callable, Sequence],
                  device_fn: Callable, depth: int = 3,
                  max_inflight: Optional[int] = None,
-                 on_batch: Optional[Callable] = None):
+                 on_batch: Optional[Callable] = None,
+                 tracer=None):
         if callable(host):
             self.host_fn, self.stages = host, None
         else:
@@ -216,6 +231,7 @@ class PipelineScheduler:
             if not self.stages:
                 raise ValueError("empty stage sequence")
         self.device_fn = device_fn
+        self.tracer = tracer
         self.depth = max(1, depth)
         self.max_inflight = max_inflight or 2 * self.depth
         self.on_batch = on_batch
@@ -289,9 +305,18 @@ class PipelineScheduler:
                 self._complete(t)
 
     # -- host execution ------------------------------------------------------
+    def _traced(self, name: str, ticket: StreamTicket, fn, *args):
+        """Run one pipeline step, under a span when the ticket is traced
+        (the untraced path is a single attribute test + call)."""
+        tr = self.tracer
+        if tr is None or ticket.trace is None:
+            return fn(*args)
+        with tr.span(name, ctx=ticket.trace, seq=ticket.seq):
+            return fn(*args)
+
     def _timed_host(self, ticket: StreamTicket):
         t = time.perf_counter()
-        hb = self.host_fn(ticket.item)
+        hb = self._traced("host", ticket, self.host_fn, ticket.item)
         dt = time.perf_counter() - t
         ticket.stage_times["host"] = dt
         return hb, dt
@@ -318,7 +343,7 @@ class PipelineScheduler:
         st = self.stages[i]
         t0 = time.perf_counter()
         try:
-            out = st.run(value)
+            out = self._traced(st.name, ticket, st.run, value)
         except BaseException as e:             # noqa: BLE001
             ticket.stage_times[st.name] = \
                 ticket.stage_times.get(st.name, 0.0) \
@@ -362,6 +387,8 @@ class PipelineScheduler:
             if self._inflight == 0:
                 self._active_since = time.perf_counter()
             self._inflight += 1
+        if self.tracer is not None:
+            t.trace = self.tracer.maybe_trace(seq=t.seq)
         try:
             self._submit_host(t)
             self._order_q.put(t)
@@ -435,6 +462,13 @@ class PipelineScheduler:
         with self._lock:             # same lock as run()'s serial recorder
             self.stats.record(ticket.t_host, ticket.t_device)
             self.stats.merge_stage_times(ticket.stage_times)
+        if ticket.trace is not None:
+            # close the batch's span tree before waiters wake, so a
+            # result() immediately followed by export sees the full tree
+            self.tracer.finish_ticket(
+                ticket.trace, error=ticket.error is not None,
+                t_host=round(ticket.t_host, 6),
+                t_device=round(ticket.t_device, 6))
         ticket._event.set()          # resolve BEFORE on_done: callbacks may
         if ticket.on_done is not None:           # call ticket.result()
             try:
@@ -478,7 +512,9 @@ class PipelineScheduler:
             try:
                 hb, t.t_host = t._host_future.result()
                 td0 = time.perf_counter()
-                t.output = self.device_fn(hb)      # async dispatch
+                # "device" span = dispatch of the jitted program (async);
+                # the sync wait shows up as the "drain" span in _drain
+                t.output = self._traced("device", t, self.device_fn, hb)
             except BaseException as e:             # noqa: BLE001
                 t.error = e
             if pending is not None:                # drain batch i-1 while
@@ -496,7 +532,8 @@ class PipelineScheduler:
     def _drain(self, ticket: StreamTicket, extra_device_time: bool = False):
         t0 = time.perf_counter()
         try:
-            jax.block_until_ready(ticket.output)
+            self._traced("drain", ticket, jax.block_until_ready,
+                         ticket.output)
         except BaseException as e:                 # noqa: BLE001
             ticket.error = e
         if extra_device_time:

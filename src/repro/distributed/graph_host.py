@@ -23,6 +23,7 @@ or SIGTERM.
 """
 from __future__ import annotations
 
+import os
 import threading
 import time
 from types import SimpleNamespace
@@ -32,6 +33,7 @@ import numpy as np
 
 from repro.core.batchplan import BatchPlan, BuildStage, SelectStage
 from repro.distributed import wire
+from repro.obs.trace import SpanAllocator, now, span_dict
 from repro.store.nbr_cache import NeighborhoodCache, SubgraphRowCache
 
 
@@ -48,7 +50,9 @@ class _StagePair:
             num_threads=service.num_threads,
             nbr_cache=service.nbr_cache,
             sg_cache=service.sg_cache,
-            e_pad=e_pad)
+            e_pad=e_pad,
+            tracer=None)   # stages read eng.tracer; remote spans are
+        #                    emitted by the service itself instead
         self.select = SelectStage(eng)
         self.build = BuildStage(eng)
 
@@ -84,6 +88,14 @@ class GraphHostService:
         self._lock = threading.Lock()
         self.requests = 0
         self.targets_served = 0
+        # host-side observability (always on — two clock reads per call):
+        # cumulative select/build wall split, so the device host's
+        # store_report() can show WHERE remote prep time goes per host,
+        # and span emission state for traced calls (payload["trace"])
+        self.stage_times: Dict[str, float] = {"select": 0.0, "build": 0.0}
+        self.spans_emitted = 0
+        self._span_ids = SpanAllocator()
+        self._span_host = f"graph-host:{os.getpid()}"
 
     def _pair(self, n: int, alpha: float, eps: float,
               e_pad: int) -> _StagePair:
@@ -101,16 +113,50 @@ class GraphHostService:
                           payload["e_pad"])
         plan = BatchPlan(targets=np.asarray(payload["targets"],
                                             dtype=np.int64))
-        plan = pair.build.run(pair.select.run(plan))
+        t0 = now()
+        plan = pair.select.run(plan)
+        t1 = now()
+        plan = pair.build.run(plan)
+        t2 = now()
         with self._lock:
             self.requests += 1
             self.targets_served += len(plan.targets)
-        return {"node_lists": wire.node_lists_to_wire(plan.node_lists),
-                "rows": wire.rows_to_wire(plan.rows),
-                "nbr_hits": plan.nbr_hits,
-                "nbr_misses": plan.nbr_misses,
-                "build_hits": plan.build_hits,
-                "build_misses": plan.build_misses}
+            self.stage_times["select"] += t1 - t0
+            self.stage_times["build"] += t2 - t1
+        result = {"node_lists": wire.node_lists_to_wire(plan.node_lists),
+                  "rows": wire.rows_to_wire(plan.rows),
+                  "nbr_hits": plan.nbr_hits,
+                  "nbr_misses": plan.nbr_misses,
+                  "build_hits": plan.build_hits,
+                  "build_misses": plan.build_misses}
+        trace = payload.get("trace")
+        if trace is not None:
+            # traced call: emit this host's select/build spans, children
+            # of the CLIENT's rpc-stage span. Timestamps are THIS
+            # process's clock — the client shifts them by its ping-based
+            # offset estimate when stitching (tracer.ingest_remote).
+            # Span ids come from this process's allocator (pid-prefixed,
+            # so they can never collide with the client's ids).
+            tid = threading.get_ident() & 0xFFFFFF
+            common = dict(trace_id=int(trace["trace_id"]),
+                          parent_id=int(trace["parent"]),
+                          host=self._span_host, cat="remote")
+            result["spans"] = [
+                span_dict(name="remote.select",
+                          span_id=self._span_ids.next_id(),
+                          t0=t0, dur=t1 - t0, track="remote.select",
+                          args={"tid": tid, "nbr_hits": plan.nbr_hits,
+                                "nbr_misses": plan.nbr_misses},
+                          **common),
+                span_dict(name="remote.build",
+                          span_id=self._span_ids.next_id(),
+                          t0=t1, dur=t2 - t1, track="remote.build",
+                          args={"tid": tid, "build_hits": plan.build_hits,
+                                "build_misses": plan.build_misses},
+                          **common)]
+            with self._lock:
+                self.spans_emitted += 2
+        return result
 
     def invalidate(self, payload: dict) -> dict:
         vs = np.asarray(payload["vertices"], dtype=np.int64)
@@ -122,8 +168,16 @@ class GraphHostService:
         return {"dropped": dropped}
 
     def report(self, payload: Optional[dict] = None) -> dict:
+        with self._lock:
+            stage_times = {k: round(v, 6)
+                           for k, v in self.stage_times.items()}
         r = {"requests": self.requests,
              "targets_served": self.targets_served,
+             # host-side Select/Build wall split + span counters, so the
+             # device host's store_report() shows WHERE remote prep time
+             # goes per host, not just call totals
+             "stage_times": stage_times,
+             "spans_emitted": self.spans_emitted,
              "models": [list(k) for k in self._pairs]}
         if self.nbr_cache is not None:
             r["nbr_cache"] = self.nbr_cache.stats()
@@ -132,7 +186,11 @@ class GraphHostService:
         return r
 
     def ping(self, payload: Optional[dict] = None) -> dict:
-        return {"pong": True, "num_vertices": self.graph.num_vertices}
+        # "clock" is this process's monotonic wall clock (obs.trace.now):
+        # the client's ping loop turns (send time, rtt, clock) into a
+        # per-endpoint offset estimate for stitching remote spans
+        return {"pong": True, "num_vertices": self.graph.num_vertices,
+                "clock": now()}
 
     # -- dispatch ------------------------------------------------------------
     _METHODS = ("select_build", "invalidate", "report", "ping")

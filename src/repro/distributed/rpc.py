@@ -468,6 +468,14 @@ class RemoteSelectBuildStage(PlanStage):
             "eps": float(cfg.ppr_eps),
             "e_pad": int(eng.e_pad),
         }
+        tracer = getattr(eng, "tracer", None)
+        if tracer is not None:
+            # the scheduler opened this ticket's stage span on THIS
+            # thread; its ids ride the wire meta so the graph host's
+            # spans come back parented under it (cross-host stitching)
+            ids = tracer.current_ids()
+            if ids is not None:
+                payload["trace"] = {"trace_id": ids[0], "parent": ids[1]}
         affinity = int(plan.targets[0]) if len(plan.targets) else 0
         t0 = time.perf_counter()
         try:
@@ -490,7 +498,51 @@ class RemoteSelectBuildStage(PlanStage):
             retries=meta.retries, timeouts=meta.timeouts,
             wall=time.perf_counter() - t0, remote=meta.remote_s,
             wire=meta.wire_s)
+        if tracer is not None and "trace" in payload:
+            tracer.annotate(endpoint=meta.endpoint,
+                            bytes_out=meta.bytes_out,
+                            bytes_in=meta.bytes_in,
+                            retries=meta.retries,
+                            remote_s=round(meta.remote_s, 6))
+            spans = result.get("spans")
+            if spans:
+                tracer.ingest_remote(spans, meta.endpoint)
         return plan
+
+
+def estimate_clock_offsets(pool: HostPool, pings: int = 5) -> dict:
+    """Ping-based clock sync per graph host: for each transport, send
+    ``pings`` pings, and from the round trip with the SMALLEST rtt (the
+    one least contaminated by queueing) estimate
+
+        offset = remote_clock - (t_send + rtt / 2)
+
+    i.e. the remote wall clock minus the local one under the symmetric-
+    link assumption. ``tracer.ingest_remote`` subtracts the offset from
+    remote span timestamps to map them onto the client timeline; the
+    residual error is bounded by the link's asymmetry (at most rtt/2).
+    Hosts that fail to answer or predate the ``clock`` ping field are
+    skipped — their spans stitch unshifted."""
+    from repro.obs.trace import now
+    out = {}
+    for tr in pool.transports:
+        best = None
+        for _ in range(max(1, pings)):
+            t_send = now()
+            try:
+                result, _ = tr.call("ping", None, timeout=pool.timeout)
+            except (TransportError, RemoteCallError):
+                break
+            rtt = now() - t_send
+            clock = result.get("clock") if isinstance(result, dict) \
+                else None
+            if clock is None:        # pre-observability peer
+                break
+            if best is None or rtt < best[0]:
+                best = (rtt, float(clock) - (t_send + rtt / 2.0))
+        if best is not None:
+            out[tr.endpoint] = {"offset_s": best[1], "rtt_s": best[0]}
+    return out
 
 
 def build_host_pool(config, graph=None) -> HostPool:
@@ -525,4 +577,5 @@ def build_host_pool(config, graph=None) -> HostPool:
 __all__ = ["Transport", "InProcTransport", "SocketTransport",
            "GraphHostServer", "HostPool", "RemoteSelectBuildStage",
            "TransportError", "RPCTimeout", "RemoteCallError",
-           "CallMeta", "PoolCallMeta", "build_host_pool"]
+           "CallMeta", "PoolCallMeta", "build_host_pool",
+           "estimate_clock_offsets"]

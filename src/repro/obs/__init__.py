@@ -1,0 +1,25 @@
+"""Observability: per-batch distributed tracing, streaming histograms,
+flight-recorder forensics, and Perfetto-loadable trace export.
+
+Enable with ``ServingConfig(trace=TraceConfig())``; off by default and
+zero-cost when off (every instrumentation site is one ``is None`` test,
+and traced runs are bitwise-identical to untraced ones). See
+docs/OBSERVABILITY.md.
+"""
+from repro.obs.calib import CalibrationTable, run_instrumented
+from repro.obs.export import (containment, to_chrome_trace,
+                              validate_chrome_trace, write_chrome_trace)
+from repro.obs.flight import FlightRecorder
+from repro.obs.hist import LogHistogram, Reservoir, hist_dict_quantile
+from repro.obs.trace import (SpanAllocator, TraceConfig, TraceContext,
+                             Tracer, now, span_dict)
+
+__all__ = [
+    "TraceConfig", "TraceContext", "Tracer", "SpanAllocator",
+    "span_dict", "now",
+    "LogHistogram", "Reservoir", "hist_dict_quantile",
+    "FlightRecorder",
+    "CalibrationTable", "run_instrumented",
+    "to_chrome_trace", "write_chrome_trace", "validate_chrome_trace",
+    "containment",
+]

@@ -1,0 +1,138 @@
+"""Per-op measured latencies: the calibration table for cost dispatch.
+
+The op-mode mux (``specialize(mode="auto")``) picks dense vs
+scatter-gather per op from a FLOP model. The ROADMAP's measured-cost
+dispatch item wants that decision driven by *measured* per-op latencies
+on the serving hardware instead — this module records them.
+
+The compiled program is one jitted ``lax.scan`` — there is no way to
+time individual ops inside it. So calibration runs a **separate,
+sampled, eager pass**: every ``calibrate_every``-th traced batch, the
+engine re-executes the program's sections step by step (the exact step
+closures the jit uses, via ``program.compile_steps``), blocking after
+each step and recording its duration into a ``LogHistogram`` keyed
+``(op_label, mode, size_bucket)``. The pass's outputs are **discarded**
+— the jitted result is what gets served — so enabling calibration never
+changes serving outputs; it only adds (roughly 1x eager) device work on
+the sampled batch, which is why it defaults to off.
+
+Caveat on the numbers: eager per-step timings include dispatch overhead
+and exclude jit fusion across steps, so they are an upper bound on the
+op's share inside the compiled program — fine for *relative* mode
+choices (dense vs sg for the same op), which is what dispatch needs.
+"""
+from __future__ import annotations
+
+import threading
+from typing import Dict, List, Tuple
+
+from repro.obs.hist import LogHistogram
+from repro.obs.trace import now
+
+
+def op_label(ops: Tuple) -> str:
+    """Step label: the op class name, or the fused group joined with
+    '+' (e.g. ``Aggregate+Residual+Transform`` for the Pallas peephole)."""
+    return "+".join(type(o).__name__ for o in ops)
+
+
+def op_mode(ops: Tuple, impl: str) -> str:
+    """``impl/opmode`` — e.g. ``pallas/dense``, ``xla/sg``; ops without
+    a dense/sg mux (Residual, AttentionScore) report ``impl/-``."""
+    for o in ops:
+        m = getattr(o, "mode", None)
+        if m:
+            return f"{impl}/{m}"
+    return f"{impl}/-"
+
+
+def size_bucket(batch: Dict) -> int:
+    """Power-of-two work bucket: bit length of total vertex slots C*N
+    (the quantity every ACK kernel's cost scales with). Same deployment
+    -> same bucket, so per-deployment tables stay single-bucket while a
+    table aggregated across deployments keeps sizes apart."""
+    mask = batch.get("mask")
+    if mask is None:
+        return 0
+    c, n = mask.shape[0], mask.shape[1]
+    return int(c * n).bit_length()
+
+
+class CalibrationTable:
+    """(op_label, mode, size_bucket) -> LogHistogram of step seconds."""
+
+    def __init__(self):
+        self._hists: Dict[Tuple[str, str, int], LogHistogram] = {}
+        self._lock = threading.Lock()
+        self.passes = 0
+
+    def record(self, label: str, mode: str, bucket: int,
+               dur_s: float) -> None:
+        key = (label, mode, bucket)
+        with self._lock:
+            h = self._hists.get(key)
+            if h is None:
+                h = self._hists[key] = LogHistogram()
+        h.record(dur_s)
+
+    def rows(self) -> List[dict]:
+        """Flat sorted rows — what ``trace_report()['calibration']``
+        exposes and what a measured-cost dispatcher would consume."""
+        with self._lock:
+            items = sorted(self._hists.items())
+        out = []
+        for (label, mode, bucket), h in items:
+            out.append({"op": label, "mode": mode, "size_bucket": bucket,
+                        "count": h.count, "mean_s": round(h.mean, 9),
+                        "p50_s": round(h.quantile(0.5), 9),
+                        "p99_s": round(h.quantile(0.99), 9)})
+        return out
+
+    def to_dict(self) -> dict:
+        return {"passes": self.passes, "rows": self.rows()}
+
+    def __len__(self) -> int:
+        with self._lock:
+            return len(self._hists)
+
+
+def run_instrumented(program, params, batch, impl: str,
+                     table: CalibrationTable) -> None:
+    """One instrumented eager pass over the compiled program's sections.
+
+    Uses the same step closures as the jit (``compile_steps``) but runs
+    them eagerly, blocking on the register file after each step so the
+    recorded duration covers that step's device work. Inner layers run
+    unrolled (index ``i`` of the stacked weights) instead of under
+    ``lax.scan`` — scan would hide the per-step boundaries. All outputs
+    are discarded."""
+    import jax
+    from repro.core.program import compile_steps
+
+    bucket = size_bucket(batch)
+
+    def timed_section(section_params, h, steps, h0=None):
+        regs = {"h": h, "h_in": h, "h0": h if h0 is None else h0}
+        for ops, step in steps:
+            t0 = now()
+            step(section_params, regs, batch)
+            jax.block_until_ready(regs)
+            table.record(op_label(ops), op_mode(ops, impl), bucket,
+                         now() - t0)
+        return regs["h"]
+
+    steps0 = compile_steps(program.layer0, impl)
+    h = timed_section(params["layer0"], batch["feats"], steps0)
+    if program.n_layers > 1:
+        steps_i = compile_steps(program.inner, impl)
+        h0 = h
+        for i in range(program.n_layers - 1):
+            lp = jax.tree_util.tree_map(lambda a: a[i], params["layers"])
+            h = timed_section(lp, h, steps_i, h0=h0)
+    # the tail (Readout/Classify) is a mask-reduce + one matmul — noise
+    # next to the layer ops, and it has no dense/sg mux to calibrate
+    table.passes += 1
+
+
+__all__ = ["CalibrationTable", "run_instrumented", "op_label",
+           "op_mode", "size_bucket"]

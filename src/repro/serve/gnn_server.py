@@ -30,7 +30,8 @@ from repro.core.dse import DSEPlan, TPUSpec, explore, validate_models
 from repro.core.engine import DecoupledEngine
 from repro.core.report_schema import (SCHEMA_VERSION, rpc_section,
                                       shards_section, stages_section,
-                                      store_section)
+                                      store_section, trace_section)
+from repro.obs.hist import LogHistogram, Reservoir
 
 DEFAULT_MODEL = "default"
 
@@ -51,20 +52,48 @@ class Request:
 
 @dataclass
 class ServerStats:
-    latencies: List[float] = field(default_factory=list)
-    batch_latencies: List[float] = field(default_factory=list)
+    """Per-lane latency state in O(1) memory (schema v2): request and
+    batch latencies stream into fixed-size ``LogHistogram``s (exact
+    count/mean, quantiles within one ~2.2% bucket) instead of the
+    unbounded raw lists of schema v1 — a server that handles millions of
+    requests no longer leaks a float per request. ``recent`` keeps the
+    newest 256 raw request latencies verbatim for forensics."""
+    hist: LogHistogram = field(default_factory=LogHistogram)
+    batch_hist: LogHistogram = field(default_factory=LogHistogram)
+    recent: Reservoir = field(default_factory=lambda: Reservoir(256))
     n_batches: int = 0
 
+    def record(self, latency_s: float) -> None:
+        self.hist.record(latency_s)
+        self.recent.record(latency_s)
+
+    def record_batch(self, latency_s: float) -> None:
+        self.batch_hist.record(latency_s)
+        self.n_batches += 1
+
+    def merge(self, other: "ServerStats") -> "ServerStats":
+        self.hist.merge(other.hist)
+        self.batch_hist.merge(other.batch_hist)
+        for v in other.recent.values():
+            self.recent.record(v)
+        self.n_batches += other.n_batches
+        return self
+
+    @property
+    def nbytes(self) -> int:
+        """Fixed footprint of the stats structures (the O(1)-in-request-
+        count property the regression test pins)."""
+        return self.hist.nbytes + self.batch_hist.nbytes \
+            + self.recent.capacity * 8
+
     def percentiles(self) -> Dict[str, float]:
-        if not self.latencies:
+        if not self.hist.count:
             return {}
-        a = np.array(self.latencies)
-        return {"p50": float(np.percentile(a, 50)),
-                "p90": float(np.percentile(a, 90)),
-                "p99": float(np.percentile(a, 99)),
-                "mean": float(a.mean()),
-                "batch_mean": float(np.mean(self.batch_latencies)),
-                "n": len(a)}
+        return {**self.hist.percentiles(),
+                "mean": self.hist.mean,
+                "batch_mean": self.batch_hist.mean,
+                "n": self.hist.count,
+                "hist": self.hist.to_dict()}
 
 
 class _ModelLane:
@@ -127,16 +156,14 @@ class _ModelLane:
             # drain() can raise immediately instead of timing out
             for r in reqs:
                 r.error = ticket.error
-            self.stats.batch_latencies.append(t1 - t0)
-            self.stats.n_batches += 1
+            self.stats.record_batch(t1 - t0)
             return
         emb = np.asarray(ticket.output)
         for i, r in enumerate(reqs):
             r.embedding = emb[i]
             r.t_done = t1
-            self.stats.latencies.append(r.latency)
-        self.stats.batch_latencies.append(t1 - t0)
-        self.stats.n_batches += 1
+            self.stats.record(r.latency)
+        self.stats.record_batch(t1 - t0)
 
     # -- lifecycle -----------------------------------------------------------
     def start(self):
@@ -183,6 +210,10 @@ class _ModelLane:
         rpc = rpc_section(sched)
         if rpc is not None:
             r["rpc"] = rpc
+        trace = trace_section(self.engine.tracer,
+                              self.engine._calib)
+        if trace is not None:
+            r["trace"] = trace
         return r
 
 
@@ -310,9 +341,7 @@ class GNNServer:
         """Aggregate over all models (back-compat single-model view)."""
         agg = ServerStats()
         for lane in self._lanes.values():
-            agg.latencies += lane.stats.latencies
-            agg.batch_latencies += lane.stats.batch_latencies
-            agg.n_batches += lane.stats.n_batches
+            agg.merge(lane.stats)
         return agg
 
     def report(self) -> dict:

@@ -1,0 +1,408 @@
+"""Observability subsystem: streaming histograms (fixed memory, exact
+counts), flight recorder (exactly the K slowest), span tree
+well-formedness, chrome-trace export shape, cross-RPC trace propagation
+through BOTH transports with clock-offset stitching, disabled-tracing
+bitwise equality, and the O(1)-memory regression for server stats."""
+import json
+
+import numpy as np
+import pytest
+
+from repro.core.config import ServingConfig
+from repro.core.engine import DecoupledEngine
+from repro.core.report_schema import SCHEMA, SCHEMA_VERSION
+from repro.distributed.graph_host import GraphHostService
+from repro.distributed.rpc import GraphHostServer, estimate_clock_offsets
+from repro.gnn.model import GNNConfig
+from repro.graphs.synthetic import get_graph
+from repro.obs import (CalibrationTable, FlightRecorder, LogHistogram,
+                       Reservoir, TraceConfig, Tracer, containment,
+                       hist_dict_quantile, to_chrome_trace,
+                       validate_chrome_trace)
+from repro.obs.export import main as export_main
+from repro.serve.gnn_server import GNNServer, ServerStats
+
+N = 16
+C = 4
+SCALE = 0.004
+SEED = 1
+TARGETS = np.arange(12)
+
+
+@pytest.fixture(scope="module")
+def graph():
+    return get_graph("flickr", scale=SCALE, seed=SEED)
+
+
+def _cfg(graph):
+    return GNNConfig(kind="gcn", n_layers=2, receptive_field=N,
+                     f_in=graph.feature_dim)
+
+
+def _assert_well_formed(spans):
+    """No orphans, no negative durations, children inside parents'
+    traces."""
+    ids = {s["span_id"] for s in spans}
+    by_id = {s["span_id"]: s for s in spans}
+    assert len(ids) == len(spans), "duplicate span ids"
+    for s in spans:
+        assert s["dur"] >= 0, f"negative duration: {s}"
+        if s["parent_id"] is not None:
+            assert s["parent_id"] in ids, f"orphan span: {s}"
+            assert by_id[s["parent_id"]]["trace_id"] == s["trace_id"], \
+                "child crosses trace boundary"
+
+
+class TestLogHistogram:
+    def test_exact_count_mean_min_max(self):
+        h = LogHistogram()
+        vals = [0.001, 0.002, 0.004, 0.1, 1.5]
+        for v in vals:
+            h.record(v)
+        assert h.count == len(vals)
+        assert h.mean == pytest.approx(np.mean(vals))
+        assert h.min == min(vals) and h.max == max(vals)
+
+    def test_quantile_within_bucket_error(self):
+        rng = np.random.default_rng(0)
+        vals = rng.lognormal(-5, 1.0, 10_000)
+        h = LogHistogram()
+        for v in vals:
+            h.record(v)
+        for q in (0.5, 0.9, 0.99):
+            exact = float(np.quantile(vals, q))
+            est = h.quantile(q)
+            # one bucket is 2**(1/16) wide (~4.4% total slack)
+            assert est == pytest.approx(exact, rel=0.05)
+
+    def test_fixed_memory(self):
+        h = LogHistogram()
+        before = h.nbytes
+        for v in np.random.default_rng(1).uniform(1e-6, 10, 50_000):
+            h.record(float(v))
+        assert h.nbytes == before      # O(1) in samples
+
+    def test_ignores_negative_and_nan(self):
+        h = LogHistogram()
+        h.record(-1.0)
+        h.record(float("nan"))
+        assert h.count == 0 and h.quantile(0.5) == 0.0
+
+    def test_merge_and_serialized_quantile(self):
+        a, b = LogHistogram(), LogHistogram()
+        for v in (0.001, 0.002):
+            a.record(v)
+        for v in (0.1, 0.2):
+            b.record(v)
+        a.merge(b)
+        assert a.count == 4
+        d = a.to_dict()
+        assert d["count"] == 4
+        assert hist_dict_quantile(d, 0.5) == a.quantile(0.5)
+
+    def test_reservoir_bounded(self):
+        r = Reservoir(8)
+        for i in range(100):
+            r.record(float(i))
+        assert len(r) == 8
+        assert r.values() == [float(i) for i in range(92, 100)]
+
+
+class TestFlightRecorder:
+    def test_keeps_exactly_k_slowest(self):
+        fr = FlightRecorder(4)
+        rng = np.random.default_rng(2)
+        durs = rng.uniform(0.001, 1.0, 50)
+        for i, d in enumerate(durs):
+            fr.offer(i, float(d), [{"span": i}])
+        kept = [e["dur"] for e in fr.entries()]
+        assert len(kept) == 4
+        assert kept == sorted(durs, reverse=True)[:4]
+        assert kept == sorted(kept, reverse=True)   # slowest first
+
+    def test_k_zero_keeps_nothing(self):
+        fr = FlightRecorder(0)
+        assert fr.offer(1, 1.0, []) is False
+        assert len(fr) == 0
+
+
+class TestTracerCore:
+    def test_span_tree_well_formed(self):
+        tr = Tracer(TraceConfig())
+        for i in range(3):
+            ctx = tr.maybe_trace(seq=i)
+            with tr.span("select", ctx=ctx):
+                with tr.span("inner"):
+                    pass
+            tr.finish_ticket(ctx)
+        spans = tr.export_spans()
+        _assert_well_formed(spans)
+        assert sum(1 for s in spans if s["name"] == "batch") == 3
+        inner = next(s for s in spans if s["name"] == "inner")
+        sel = next(s for s in spans
+                   if s["name"] == "select"
+                   and s["trace_id"] == inner["trace_id"])
+        assert inner["parent_id"] == sel["span_id"]
+
+    def test_sampling(self):
+        tr = Tracer(TraceConfig(sample_every=3))
+        ctxs = [tr.maybe_trace() for _ in range(9)]
+        assert sum(c is not None for c in ctxs) == 3
+
+    def test_untraced_span_is_noop(self):
+        tr = Tracer(TraceConfig())
+        with tr.span("anything") as h:   # no ctx, no current span
+            assert h is None
+        assert tr.spans_recorded == 0
+
+    def test_ring_bounded(self):
+        tr = Tracer(TraceConfig(ring_capacity=10, flight_k=0))
+        for i in range(50):
+            ctx = tr.maybe_trace(seq=i)
+            with tr.span("s", ctx=ctx):
+                pass
+            tr.finish_ticket(ctx)
+        assert len(tr.export_spans()) <= 10
+        assert tr.spans_dropped > 0
+
+    def test_config_validation(self):
+        with pytest.raises(ValueError):
+            TraceConfig(sample_every=0)
+        with pytest.raises(ValueError):
+            TraceConfig(ring_capacity=0)
+        with pytest.raises(TypeError):
+            ServingConfig(trace="yes")
+
+
+class TestChromeExport:
+    def test_export_shape_and_validation(self):
+        tr = Tracer(TraceConfig())
+        ctx = tr.maybe_trace(seq=0)
+        with tr.span("select", ctx=ctx):
+            with tr.span("inner"):
+                pass
+        tr.finish_ticket(ctx)
+        tree = to_chrome_trace(tr.export_spans())
+        assert validate_chrome_trace(tree) == []
+        evs = tree["traceEvents"]
+        assert sum(1 for e in evs if e["ph"] == "B") \
+            == sum(1 for e in evs if e["ph"] == "E")
+        # metadata rows name processes and lanes
+        assert any(e["ph"] == "M" and e["name"] == "process_name"
+                   for e in evs)
+
+    def test_validator_catches_broken_traces(self):
+        b = {"ph": "B", "name": "x", "pid": 1, "tid": 1, "ts": 0.0,
+             "args": {}}
+        assert validate_chrome_trace({"traceEvents": [b]})  # unclosed B
+        e = {"ph": "E", "name": "x", "pid": 1, "tid": 1, "ts": 1.0}
+        assert validate_chrome_trace({"traceEvents": [e]})  # E without B
+        dangling = dict(b, args={"span_id": 1, "parent_id": 999})
+        probs = validate_chrome_trace(
+            {"traceEvents": [dangling, dict(e)]})
+        assert any("resolves to no span" in p for p in probs)
+
+    def test_cli_roundtrip(self, tmp_path):
+        tr = Tracer(TraceConfig())
+        ctx = tr.maybe_trace(seq=0)
+        with tr.span("select", ctx=ctx):
+            pass
+        tr.finish_ticket(ctx)
+        dump = tmp_path / "spans.json"
+        dump.write_text(json.dumps(tr.export_spans()))
+        out = tmp_path / "out.trace.json"
+        assert export_main([str(dump), "-o", str(out)]) == 0
+        assert export_main([str(out), "--validate"]) == 0
+
+
+class TestCalibration:
+    def test_table_rows(self):
+        t = CalibrationTable()
+        for d in (0.001, 0.002, 0.003):
+            t.record("Aggregate", "xla/dense", 10, d)
+        rows = t.rows()
+        assert len(rows) == 1 and rows[0]["count"] == 3
+        assert rows[0]["op"] == "Aggregate"
+
+    def test_engine_calibration_pass(self, graph):
+        tc = TraceConfig(calibrate_every=1)
+        sc = ServingConfig(batch_size=C, num_threads=2, trace=tc)
+        with DecoupledEngine(graph, _cfg(graph), config=sc) as eng:
+            out = eng.infer(TARGETS).embeddings
+        with DecoupledEngine(graph, _cfg(graph),
+                             config=ServingConfig(
+                                 batch_size=C, num_threads=2)) as eng2:
+            ref = eng2.infer(TARGETS).embeddings
+        # calibration outputs are discarded: serving stays bitwise
+        np.testing.assert_array_equal(out, ref)
+
+
+class TestEngineTracing:
+    def test_disabled_tracing_bitwise_equal(self, graph):
+        cfg = _cfg(graph)
+        with DecoupledEngine(graph, cfg, config=ServingConfig(
+                batch_size=C, num_threads=2)) as eng:
+            ref = eng.infer(TARGETS).embeddings
+            assert eng.trace_report() == {"enabled": False}
+            with pytest.raises(ValueError):
+                eng.export_trace("/tmp/never.json")
+        with DecoupledEngine(graph, cfg, config=ServingConfig(
+                batch_size=C, num_threads=2,
+                trace=TraceConfig())) as eng:
+            out = eng.infer(TARGETS).embeddings
+            rep = eng.trace_report()
+        np.testing.assert_array_equal(ref, out)
+        assert rep["enabled"] and rep["tickets_traced"] == 3
+        for key in rep:
+            assert key in SCHEMA["trace"], f"undocumented trace key {key}"
+
+    def test_span_tree_from_real_pipeline(self, graph, tmp_path):
+        with DecoupledEngine(graph, _cfg(graph), config=ServingConfig(
+                batch_size=C, num_threads=2,
+                trace=TraceConfig())) as eng:
+            eng.infer(TARGETS)
+            spans = eng.tracer.export_spans()
+            tree = eng.export_trace(str(tmp_path / "t.json"))
+        _assert_well_formed(spans)
+        names = {s["name"] for s in spans}
+        assert {"batch", "select", "build", "pack", "device"} <= names
+        assert validate_chrome_trace(tree) == []
+        assert json.loads(
+            (tmp_path / "t.json").read_text())["traceEvents"]
+
+    def test_flight_recorder_in_engine(self, graph):
+        with DecoupledEngine(graph, _cfg(graph), config=ServingConfig(
+                batch_size=C, num_threads=2,
+                trace=TraceConfig(flight_k=2))) as eng:
+            eng.infer(np.arange(24))     # 6 batches
+            rep = eng.trace_report()
+        assert rep["flight"]["k"] == 2
+        assert rep["flight"]["retained"] == 2
+        assert rep["flight"]["offered"] == 6
+        durs = [s["dur"] for s in rep["flight"]["slowest"]]
+        assert durs == sorted(durs, reverse=True)
+
+
+class TestRemoteTracing:
+    def test_inproc_propagation_and_stitching(self, graph):
+        sc = ServingConfig(batch_size=C, num_threads=2,
+                           transport="inproc", trace=TraceConfig())
+        with DecoupledEngine(graph, _cfg(graph), config=sc) as eng:
+            ref_local = DecoupledEngine(
+                graph, _cfg(graph),
+                config=ServingConfig(batch_size=C, num_threads=2))
+            ref = ref_local.infer(TARGETS).embeddings
+            ref_local.close()
+            out = eng.infer(TARGETS).embeddings
+            spans = eng.tracer.export_spans()
+            rep = eng.trace_report()
+            sr = eng.store_report()
+        np.testing.assert_array_equal(ref, out)
+        _assert_well_formed(spans)
+        remote = [s for s in spans if s["host"].startswith("graph-host")]
+        assert {s["name"] for s in remote} \
+            == {"remote.select", "remote.build"}
+        # remote spans join the client's trace under the rpc stage span
+        by_id = {s["span_id"]: s for s in spans}
+        for s in remote:
+            assert by_id[s["parent_id"]]["name"] == "select_build"
+        assert containment(spans, "select_build", remote[0]["host"]) \
+            == []
+        assert rep["remote_spans"] == len(remote)
+        assert "inproc" in rep["clock_sync"]
+        # satellite: remote Select/Build split per host in store_report
+        host_rep = sr["graph_hosts"][0]["report"]
+        assert host_rep["stage_times"]["select"] > 0
+        assert host_rep["spans_emitted"] == len(remote)
+
+    def test_socket_propagation_and_stitching(self, graph):
+        svc = GraphHostService(graph, num_threads=2)
+        server = GraphHostServer(svc)
+        try:
+            sc = ServingConfig(batch_size=C, num_threads=2,
+                               transport="socket",
+                               endpoints=(server.endpoint,),
+                               trace=TraceConfig())
+            with DecoupledEngine(graph, _cfg(graph), config=sc) as eng:
+                eng.infer(TARGETS)
+                spans = eng.tracer.export_spans()
+                rep = eng.trace_report()
+            _assert_well_formed(spans)
+            remote = [s for s in spans
+                      if s["host"].startswith("graph-host")]
+            assert len(remote) == 2 * 3          # 2 spans x 3 batches
+            assert all(s["args"]["endpoint"] == server.endpoint
+                       for s in remote)
+            assert containment(spans, "select_build",
+                               remote[0]["host"]) == []
+            assert server.endpoint in rep["clock_sync"]
+            tree = to_chrome_trace(spans)
+            assert validate_chrome_trace(tree) == []
+        finally:
+            server.close()
+
+    def test_clock_offset_estimator(self, graph):
+        from repro.distributed.rpc import HostPool, InProcTransport
+        svc = GraphHostService(graph, num_threads=1)
+        pool = HostPool([InProcTransport(svc, owns_service=True)])
+        try:
+            sync = estimate_clock_offsets(pool, pings=3)
+            # same process, same clock anchor: offset is ~0 (< 5 ms)
+            assert abs(sync["inproc"]["offset_s"]) < 5e-3
+            assert sync["inproc"]["rtt_s"] >= 0
+        finally:
+            pool.close()
+
+
+class TestServerStatsBounded:
+    def test_percentile_keys_preserved(self):
+        st = ServerStats()
+        for v in (0.01, 0.02, 0.03):
+            st.record(v)
+        st.record_batch(0.05)
+        p = st.percentiles()
+        assert {"p50", "p90", "p99", "mean", "batch_mean",
+                "n", "hist"} <= set(p)
+        assert p["n"] == 3
+        assert p["hist"]["count"] == 3
+
+    def test_stats_memory_o1_in_batch_count(self):
+        """Regression: stats structures stay fixed-size as requests
+        stream in (the schema-v1 lists grew one float per request)."""
+        st = ServerStats()
+        for v in np.random.default_rng(0).uniform(1e-4, 1.0, 200):
+            st.record(float(v))
+            st.record_batch(float(v))
+        before = st.nbytes
+        for v in np.random.default_rng(1).uniform(1e-4, 1.0, 20_000):
+            st.record(float(v))
+            st.record_batch(float(v))
+        assert st.nbytes == before
+        assert st.hist.count == 20_200
+
+    def test_scheduler_times_bounded(self):
+        from repro.core.scheduler import RECENT_TIMES, SchedulerStats
+        s = SchedulerStats()
+        for i in range(RECENT_TIMES * 2):
+            s.record(0.001, 0.002)
+        assert len(s.host_times) == RECENT_TIMES
+        assert s.n_batches == RECENT_TIMES * 2      # totals stay exact
+        assert s.t_initialization == 0.001
+
+    def test_server_report_has_trace_section(self, graph):
+        eng = DecoupledEngine(graph, _cfg(graph), config=ServingConfig(
+            batch_size=C, num_threads=2, trace=TraceConfig()))
+        srv = GNNServer(eng, max_wait_s=0.01)
+        srv.start()
+        reqs = [srv.submit(i) for i in range(8)]
+        srv.drain(reqs, timeout=120)
+        srv.stop()
+        rep = srv.report()
+        assert rep["schema_version"] == SCHEMA_VERSION
+        lane = rep["models"]["default"]
+        assert lane["trace"]["enabled"]
+        assert lane["trace"]["tickets_traced"] >= 1
+        assert lane["latency"]["hist"]["count"] == 8
+        for key in lane["latency"]:
+            assert key in SCHEMA["latency"]
+        eng.close()
