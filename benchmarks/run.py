@@ -16,7 +16,7 @@ import traceback
 from benchmarks import (bench_eq1_loadbalance, bench_fig3_breakdown,
                         bench_fig8_latency, bench_fig10_batch,
                         bench_kernels, bench_obs, bench_pipeline,
-                        bench_program, bench_rpc,
+                        bench_precompute, bench_program, bench_rpc,
                         bench_serve_multimodel, bench_shard,
                         bench_store, bench_table5_load, bench_table6_ini)
 
@@ -35,6 +35,7 @@ SUITES = {
     "pipeline": bench_pipeline.run_suite,
     "rpc": bench_rpc.run_suite,
     "obs": bench_obs.run_suite,
+    "precompute": bench_precompute.run_suite,
 }
 
 

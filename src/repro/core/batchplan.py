@@ -59,6 +59,12 @@ class BatchPlan:
     # Pack
     sb: Optional[SubgraphBatch] = None
     device: Optional[Dict[str, np.ndarray]] = None
+    # Tier (hybrid precompute routing; set by precompute.TierStage)
+    tier_rows: Optional[np.ndarray] = None   # [C, f_out] (stale rows 0)
+    tier_fresh: Optional[np.ndarray] = None  # [C] bool freshness mask
+    tier_done: bool = False       # all-fresh: skip Select/Build/Pack
+    online_index: Optional[np.ndarray] = None  # stale slot -> online row
+    orig_targets: Optional[np.ndarray] = None  # pre-split target list
 
 
 class PlanStage:
@@ -96,6 +102,8 @@ class SelectStage(PlanStage):
         from repro.core.ini import ini_batch
         if not isinstance(plan, BatchPlan):   # pipeline entry: raw targets
             plan = BatchPlan(targets=np.asarray(plan))
+        if plan.tier_done:       # all targets served from the tier —
+            return plan          # nothing to select
         eng = self.engine
         cfg = eng.cfg
         n, a, e = cfg.receptive_field, cfg.ppr_alpha, cfg.ppr_eps
@@ -170,6 +178,8 @@ class BuildStage(PlanStage):
         self.engine = engine
 
     def run(self, plan: BatchPlan) -> BatchPlan:
+        if plan.tier_done:
+            return plan
         eng = self.engine
         cfg = eng.cfg
         n, e_pad = cfg.receptive_field, eng.e_pad
@@ -215,6 +225,8 @@ class PackStage(PlanStage):
         self.engine = engine
 
     def run(self, plan: BatchPlan) -> BatchPlan:
+        if plan.tier_done:
+            return plan
         eng = self.engine
         src = eng._fsource
         n = eng.cfg.receptive_field

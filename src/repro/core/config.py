@@ -64,6 +64,10 @@ class ServingConfig:
     # observability: None (default) = tracing off, zero-cost; a
     # TraceConfig enables per-ticket spans + histograms (obs package)
     trace: Optional[object] = None
+    # precompute: None (default) = pure online serving; a
+    # PrecomputeConfig enables the offline layer-major embedding tier
+    # + hybrid routing (precompute package)
+    precompute: Optional[object] = None
 
     def __post_init__(self):
         if self.trace is not None:
@@ -72,6 +76,12 @@ class ServingConfig:
                 raise TypeError(
                     f"trace must be an obs.TraceConfig or None, got "
                     f"{type(self.trace).__name__}")
+        if self.precompute is not None:
+            from repro.precompute.config import PrecomputeConfig
+            if not isinstance(self.precompute, PrecomputeConfig):
+                raise TypeError(
+                    f"precompute must be a precompute.PrecomputeConfig "
+                    f"or None, got {type(self.precompute).__name__}")
         if not isinstance(self.store, StorePolicy):
             raise TypeError(
                 f"store must be a StorePolicy, got "
@@ -153,6 +163,8 @@ class ServingConfig:
              "transport": self.transport}
         if self.trace is not None:
             d["trace"] = self.trace.describe()
+        if self.precompute is not None:
+            d["precompute"] = self.precompute.describe()
         if self.remote:
             d.update(endpoints=list(self.endpoints) or ["inproc"],
                      rpc_timeout_s=self.rpc_timeout_s,

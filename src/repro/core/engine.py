@@ -165,6 +165,21 @@ class DecoupledEngine:
             # by construction
             self.stages = [SelectStage(self), BuildStage(self),
                            PackStage(self)]
+        # offline precompute tier (hybrid serving): build or load the
+        # layer-major embedding table and prepend the TierStage router —
+        # tier-fresh targets skip Select/Build/Pack entirely, stale/cold
+        # targets ride the online pipeline above. Note ``params`` (the
+        # local) is the UNPADDED parameter tree — offline propagation
+        # runs on unpadded features
+        pconf = config.precompute
+        if pconf is not None and (pconf.models is None
+                                  or cfg.kind in pconf.models):
+            from repro.precompute.manager import (PrecomputeManager,
+                                                  TierStage)
+            self.precompute = PrecomputeManager(self, pconf, params)
+            self.stages = [TierStage(self)] + self.stages
+        else:
+            self.precompute = None
         # auto-repin trigger state (StorePolicy.repin_every / _hit_floor)
         self._repin_auto = bool(store.repin_every or store.repin_hit_floor)
         self._repin_lock = threading.Lock()
@@ -282,8 +297,14 @@ class DecoupledEngine:
         return d
 
     def run_device(self, device_batch) -> jax.Array:
-        if isinstance(device_batch, BatchPlan):   # staged pipeline output
-            device_batch = device_batch.device
+        plan = device_batch if isinstance(device_batch, BatchPlan) \
+            else None                             # staged pipeline output
+        if plan is not None:
+            if plan.tier_done:
+                # all-fresh fast path: the tier row gather IS the
+                # answer — no device program runs for this batch
+                return plan.tier_rows
+            device_batch = plan.device
         db = dict(device_batch)
         src = self._fsource
         tr = self.tracer
@@ -314,7 +335,16 @@ class DecoupledEngine:
                                          self.impl, self._calib)
                 except Exception:    # calibration must never break
                     pass             # serving
-        return self._infer(self.params, db)
+        out = self._infer(self.params, db)
+        if plan is not None and plan.online_index is not None:
+            # mixed batch: the online program ran on the stale targets
+            # only (padded) — rejoin with the tier rows on the original
+            # slot order. Stays a lazy jax expression: dispatch remains
+            # async, the scheduler's device station is not stalled.
+            out = jnp.where(jnp.asarray(plan.tier_fresh)[:, None],
+                            jnp.asarray(plan.tier_rows),
+                            out[jnp.asarray(plan.online_index)])
+        return out
 
     # -- end-to-end ----------------------------------------------------------
     def pad_targets(self, targets: np.ndarray) -> np.ndarray:
@@ -359,6 +389,10 @@ class DecoupledEngine:
         dropped (row-cache drops are visible in store_report())."""
         if hasattr(self._fsource, "refresh_features"):
             self._fsource.refresh_features(vertices)
+        if self.precompute is not None:
+            # demote the dependency ball in the embedding tier (those
+            # vertices fall back to the online path until refreshed)
+            self.precompute.on_invalidate(vertices)
         if self._host_pool is not None:
             # multi-host: the caches live on the graph hosts — broadcast
             # the drop (best-effort; a dead host holds no live state)
@@ -483,9 +517,20 @@ class DecoupledEngine:
                                   metadata={"config":
                                             self.config.describe()})
 
+    def precompute_report(self) -> dict:
+        """Embedding-tier state of this deployment (the ``precompute.*``
+        schema section): residency, freshness, hit/demotion counters and
+        refresh backlog. ``{"enabled": False}`` when the deployment was
+        built without ``ServingConfig(precompute=...)`` (or this model
+        kind is excluded from ``PrecomputeConfig.models``)."""
+        from repro.core.report_schema import precompute_section
+        return precompute_section(self.precompute)
+
     def close(self):
         if hasattr(self.graph, "unregister_listener"):
             self.graph.unregister_listener(self.invalidate)
+        if self.precompute is not None:
+            self.precompute.close()
         self.scheduler.close()
         if self._repin_pool is not None:
             self._repin_pool.shutdown(wait=True)

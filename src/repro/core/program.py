@@ -464,14 +464,39 @@ def _forced(force: ForceSpec, site: str, opname: str) -> Optional[str]:
 
 def specialize(prog: AckProgram, *, n: int, avg_edges: float = 0.0,
                f_in: Optional[int] = None, f_hidden: int = 256,
-               force: ForceSpec = None
+               force: ForceSpec = None, measured=None,
+               measured_impl: str = "xla",
+               measured_bucket: Optional[int] = None
                ) -> Tuple[AckProgram, ProgramDecision]:
     """Set every op's mode mux. Mux'd ops (Aggregate, AttentionSoftmax)
     each get their own dense/sg decision from their kernel's FLOP model at
     that op's feature width; Transform and friends are recorded as dense.
     ``force`` is None (auto), "dense"/"sg" (all mux'd ops), or a dict keyed
-    by site ("layer0[0]") or op class name ("Aggregate")."""
+    by site ("layer0[0]") or op class name ("Aggregate").
+
+    ``measured`` is an optional ``obs.calib.CalibrationTable``: when BOTH
+    the dense and sg cells for a mux'd op are populated (keyed by op
+    class name, at ``measured_impl`` / ``measured_bucket``), their
+    measured p50s override the static FLOP model for that op —
+    measured-cost dispatch. Partially populated or absent cells fall
+    back to the FLOP model per-op; an explicit ``force`` always wins."""
     f_in = f_in if f_in is not None else f_hidden
+
+    def _measured_mode(op):
+        """(mode, reason) from measured p50s, or None to use the FLOP
+        model for this op."""
+        if measured is None:
+            return None
+        cls = type(op).__name__
+        td = measured.lookup(cls, f"{measured_impl}/dense",
+                             measured_bucket)
+        ts = measured.lookup(cls, f"{measured_impl}/sg", measured_bucket)
+        if td is None or ts is None:
+            return None
+        mode = "dense" if td <= ts else "sg"
+        return mode, (f"measured p50 {measured_impl} dense={td:.3e}s vs "
+                      f"sg={ts:.3e}s -> {mode}")
+
     decisions = []
     new_secs: Dict[str, Tuple[AckOp, ...]] = {}
     for sec, seq in (("layer0", prog.layer0), ("inner", prog.inner),
@@ -491,11 +516,16 @@ def specialize(prog: AckProgram, *, n: int, avg_edges: float = 0.0,
             if op.mux:
                 d = choose_mode(n, avg_edges, f_cur,
                                 force=_forced(force, site, name))
-                op = replace(op, mode=d.mode)
+                mode, reason = d.mode, d.reason
+                if _forced(force, site, name) is None:
+                    m = _measured_mode(op)
+                    if m is not None:
+                        mode, reason = m
+                op = replace(op, mode=mode)
                 if executed:
                     decisions.append(OpDecision(
-                        site, name, d.mode, True, d.dense_flops,
-                        d.sg_flops, d.reason))
+                        site, name, mode, True, d.dense_flops,
+                        d.sg_flops, reason))
             elif executed:
                 fl = op.dense_flops(n, f_cur, f_hidden)
                 decisions.append(OpDecision(

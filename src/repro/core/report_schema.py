@@ -26,6 +26,10 @@ can detect drift:
               span/ticket counters, per-span-name latency histograms,
               the flight recorder's slowest-batch summary, per-endpoint
               clock-sync estimates, and the per-op calibration table
+  precompute.* offline embedding tier (ServingConfig(precompute=...)):
+              residency / freshness / generation, tier hit + demotion +
+              promotion counters, refresh backlog and chunk counts, and
+              the tier's resident bytes
 
 Section builders take a ``SchedulerStats``-shaped object (duck-typed to
 avoid an import cycle with core.scheduler) and return plain dicts;
@@ -40,12 +44,15 @@ Version history:
      .to_dict()) whose p50/p90/p99 now come from fixed-memory buckets
      instead of unbounded raw lists. Existing keys are unchanged, so
      v1 consumers keep working; the bump flags the additive keys.
+  3  hybrid precompute serving: new optional ``precompute`` section
+     (emitted only on deployments with an embedding tier). Existing
+     keys unchanged — additive, like the v2 bump.
 """
 from __future__ import annotations
 
 from typing import Optional
 
-SCHEMA_VERSION = 2
+SCHEMA_VERSION = 3
 
 # documented key map (stable contract; bump SCHEMA_VERSION on change)
 SCHEMA = {
@@ -63,6 +70,11 @@ SCHEMA = {
               "calibrate_every", "tickets_traced", "spans",
               "spans_dropped", "remote_spans", "host", "hists",
               "flight", "clock_sync", "calibration"),
+    "precompute": ("enabled", "resident", "fresh", "hits", "misses",
+                   "hit_rate", "demotions", "promotions",
+                   "refresh_chunks", "refresh_backlog",
+                   "refresh_errors", "tier_bytes", "generation",
+                   "builds"),
 }
 
 
@@ -116,6 +128,14 @@ def trace_section(tracer, calibration=None) -> Optional[dict]:
     return d
 
 
+def precompute_section(manager) -> dict:
+    """The ``precompute.*`` section of a tiered deployment;
+    ``{"enabled": False}`` when the deployment has no embedding tier."""
+    if manager is None:
+        return {"enabled": False}
+    return manager.report()
+
+
 def scheduler_summary(stats) -> dict:
     """The full nested summary a ``SchedulerStats`` emits."""
     d = {"schema_version": SCHEMA_VERSION,
@@ -136,4 +156,4 @@ def scheduler_summary(stats) -> dict:
 
 __all__ = ["SCHEMA_VERSION", "SCHEMA", "scheduler_summary",
            "stages_section", "store_section", "shards_section",
-           "rpc_section", "trace_section"]
+           "rpc_section", "trace_section", "precompute_section"]

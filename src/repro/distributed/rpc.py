@@ -459,6 +459,8 @@ class RemoteSelectBuildStage(PlanStage):
     def run(self, plan) -> BatchPlan:
         if not isinstance(plan, BatchPlan):
             plan = BatchPlan(targets=np.asarray(plan))
+        if plan.tier_done:       # all targets served from the embedding
+            return plan          # tier — skip the remote hop entirely
         eng = self.engine
         cfg = eng.cfg
         payload = {

@@ -88,6 +88,24 @@ class CalibrationTable:
                         "p99_s": round(h.quantile(0.99), 9)})
         return out
 
+    def lookup(self, op: str, impl_mode: str,
+               size: int = None) -> float:
+        """Measured p50 step seconds for ``(op, impl_mode)`` — e.g.
+        ``("Aggregate", "xla/sg")`` — at ``size`` (a ``size_bucket``
+        value), or at the most-sampled bucket when ``size`` is None.
+        Returns None when the cell has no samples, so a dispatcher can
+        fall back to the static FLOP model per-cell."""
+        with self._lock:
+            if size is not None:
+                h = self._hists.get((op, impl_mode, size))
+            else:
+                cands = [h for (lbl, m, _), h in self._hists.items()
+                         if lbl == op and m == impl_mode]
+                h = max(cands, key=lambda h: h.count, default=None)
+        if h is None or not h.count:
+            return None
+        return h.quantile(0.5)
+
     def to_dict(self) -> dict:
         return {"passes": self.passes, "rows": self.rows()}
 

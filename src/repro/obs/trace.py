@@ -265,6 +265,33 @@ class Tracer:
                 args=h.args))
             self.hist(h.name).record(now() - h.t0)
 
+    @contextmanager
+    def root_span(self, name: str, *, cat: str = "stage",
+                  track: Optional[str] = None, **args):
+        """Open a PARENTLESS span in its own fresh trace — for
+        background work (e.g. precompute refresh chunks) that runs
+        outside any ticket context, where ``span()`` would record
+        nothing. The span lands straight in the export ring and feeds
+        the per-name histogram; child ``span()`` calls on the same
+        thread nest under it as usual."""
+        h = _SpanHandle(name, cat, self._ids.next_id(),
+                        self._ids.next_id(), None, track or name)
+        h.args["tid"] = threading.get_ident() & 0xFFFFFF
+        if args:
+            h.args.update(args)
+        stack = self._stack()
+        stack.append(h)
+        try:
+            yield h
+        finally:
+            stack.pop()
+            self._record(span_dict(
+                name=h.name, cat=h.cat, trace_id=h.trace_id,
+                span_id=h.span_id, parent_id=None, t0=h.t0,
+                dur=now() - h.t0, host=self.host, track=h.track,
+                args=h.args))
+            self.hist(h.name).record(now() - h.t0)
+
     def _record(self, sp: dict) -> None:
         with self._lock:
             self.spans_recorded += 1

@@ -1,0 +1,25 @@
+"""Offline layer-major precompute tier + hybrid serving (docs/PRECOMPUTE.md).
+
+Decoupled models make propagation a pure function of the graph: S^K X
+can be computed ONCE, layer-major, over the full graph — then serving a
+precomputed vertex is a row lookup, no PPR push, no subgraph build.
+This package holds the offline propagation engine (propagate), the
+freshness-tracked embedding table (tier), the hybrid router + refresh
+workers (manager), artifact persistence (artifact, build), and the
+``ServingConfig(precompute=...)`` knobs (config).
+"""
+from repro.precompute.artifact import (PrecomputeArtifactError,
+                                       load_artifact, save_artifact)
+from repro.precompute.config import PrecomputeConfig
+from repro.precompute.manager import PrecomputeManager, TierStage
+from repro.precompute.propagate import (PrecomputeError, agg_hops,
+                                        check_precomputable,
+                                        dependency_closure,
+                                        layer_major_embeddings)
+from repro.precompute.tier import EmbeddingTier
+
+__all__ = ["PrecomputeConfig", "PrecomputeError",
+           "PrecomputeArtifactError", "EmbeddingTier",
+           "PrecomputeManager", "TierStage", "layer_major_embeddings",
+           "dependency_closure", "check_precomputable", "agg_hops",
+           "save_artifact", "load_artifact"]

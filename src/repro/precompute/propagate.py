@@ -1,0 +1,272 @@
+"""Layer-major offline propagation — full-graph embeddings, one layer at
+a time (VoVAllen/DGL ``inference()`` pattern).
+
+The online path evaluates the whole L-layer program on each target's
+induced subgraph. Offline we exploit the converse decomposition: compute
+layer ``l``'s output for EVERY vertex before touching layer ``l+1``, so
+working memory is bounded by one [V, f] register per live value plus a
+one-hop × ``chunk_size`` aggregation working set — never L hops of
+neighborhood fan-out. The op streams executed are the SAME lowered
+``AckProgram`` sections the online engine jits (Aggregate through the
+scatter-gather ACK kernel ``agg_sg``, Transform through ``_ft``,
+Residual against the ``h0`` teleport anchor), so a precomputed row
+matches what the online path would produce for a full-coverage subgraph.
+
+``out_ids`` turns the same code path into the refresh primitive: the
+dependency closure (one inbound hop per executed Aggregate) is computed,
+propagation runs on the induced sub-CSR with GLOBAL degree
+normalization, and only the requested rows come back — bitwise what a
+full rebuild would store for them, because it IS the full rebuild
+restricted to the rows' dependency cone.
+"""
+from __future__ import annotations
+
+import functools
+from types import SimpleNamespace
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.program import (ACTS, AckProgram, Aggregate, Classify,
+                                Readout, Residual, Transform)
+from repro.gnn.layers import _ft, agg_sg
+from repro.graphs.csr import _gather_ranges, subgraph_edges
+
+
+class PrecomputeError(ValueError):
+    """The lowered program cannot be served from the offline tier."""
+
+
+def check_precomputable(prog: AckProgram) -> None:
+    """Raise PrecomputeError unless every executed layer op is pure
+    propagation (Aggregate/Residual/Transform) and the readout is the
+    target row — the regime where one stored row per vertex IS the
+    online answer."""
+    for site, op in prog.ops:
+        if site.startswith("tail"):
+            if isinstance(op, Readout) and op.kind != "target":
+                raise PrecomputeError(
+                    f"{prog.kind!r} is not precomputable: Readout"
+                    f"[{op.kind}] reduces over the induced SUBGRAPH, so "
+                    "the answer is not one row per vertex. Only "
+                    "readout='target' models can serve from the offline "
+                    "tier; route this model through the online path "
+                    "(drop it from PrecomputeConfig.models).")
+        elif not isinstance(op, (Aggregate, Residual, Transform)):
+            raise PrecomputeError(
+                f"{prog.kind!r} is not precomputable: {site} executes "
+                f"{op.describe()}, but offline layer-major propagation "
+                "supports pure Aggregate/Residual/Transform layers "
+                "(attention softmax support depends on the induced "
+                "subgraph). Route this model through the online path "
+                "(drop it from PrecomputeConfig.models).")
+
+
+def agg_hops(prog: AckProgram) -> int:
+    """Graph hops one output row depends on = executed Aggregate count
+    (the inner section runs n_layers - 1 times)."""
+    hops = sum(isinstance(op, Aggregate) for op in prog.layer0)
+    if prog.n_layers > 1:
+        hops += (prog.n_layers - 1) * sum(isinstance(op, Aggregate)
+                                          for op in prog.inner)
+    return hops
+
+
+def dependency_closure(graph, out_ids: np.ndarray,
+                       hops: int) -> np.ndarray:
+    """Sorted unique vertex set whose layer-0 inputs determine the final
+    embeddings of ``out_ids``: out_ids plus ``hops`` inbound neighbor
+    expansions (the graph is symmetrized, so out-edges are in-edges)."""
+    indptr, indices = graph.indptr, graph.indices
+    ball = np.unique(np.asarray(out_ids, np.int64))
+    cur = ball
+    for _ in range(hops):
+        if not len(cur):
+            break
+        starts, ends = indptr[cur], indptr[cur + 1]
+        total = int((ends - starts).sum())
+        if not total:
+            break
+        if len(cur) < 4096:
+            nbrs = np.concatenate([indices[s:e]
+                                   for s, e in zip(starts, ends)])
+        else:
+            nbrs = _gather_ranges(indices, starts, ends, total)
+        new = np.setdiff1d(np.unique(nbrs).astype(np.int64), ball,
+                           assume_unique=True)
+        if not len(new):
+            break
+        ball = np.union1d(ball, new)
+        cur = new
+    return ball
+
+
+# -- jitted chunk kernels (one compile per shape tuple, cached) ----------
+
+
+@functools.lru_cache(maxsize=64)
+def _agg_chunk_fn(nseg: int):
+    @jax.jit
+    def f(src, dst, w, h):
+        # the scatter-gather ACK kernel, C=1: gather h[src] rows from the
+        # FULL layer register, scatter-sum into the chunk's nseg slots
+        return agg_sg(src[None], dst[None], w[None], h[None], nseg)[0]
+    return f
+
+
+@functools.lru_cache(maxsize=64)
+def _transform_chunk_fn(act: str, with_self: bool):
+    if with_self:
+        @jax.jit
+        def f(h_src, h_in, w, w_self, b):
+            out = _ft(h_in[None], w_self, b) \
+                + _ft(h_src[None], w, jnp.zeros((), h_src.dtype))
+            return ACTS[act](out)[0]
+        return f
+
+    @jax.jit
+    def f(h_src, w, b):
+        return ACTS[act](_ft(h_src[None], w, b))[0]
+    return f
+
+
+class _LocalCSR:
+    """The induced sub-CSR over the compute set, with edge weights under
+    GLOBAL-graph normalization (what a full-coverage online subgraph
+    computes: induced degree == global degree) and per-chunk edge slices
+    padded to one uniform cap so every chunk hits the same compiled
+    kernel."""
+
+    def __init__(self, snap, ids: np.ndarray, chunk_size: int):
+        self.ids = ids
+        self.n = n = len(ids)
+        self.chunk = min(chunk_size, n)
+        deg = np.diff(snap.indptr)[ids].astype(np.float64)
+        src, dst = subgraph_edges(snap, ids)
+        order = np.argsort(dst, kind="stable")   # group edges by dst chunk
+        self.src = src[order].astype(np.int32)
+        dst = dst[order].astype(np.int64)
+        self.dst = dst
+        # chunk boundaries over local dst ids
+        self.starts = list(range(0, n, self.chunk))
+        self.e_ranges = [(int(np.searchsorted(dst, c0)),
+                          int(np.searchsorted(dst, c0 + self.chunk)))
+                         for c0 in self.starts]
+        cap = max((e1 - e0 for e0, e1 in self.e_ranges), default=0)
+        self.e_cap = max(1, cap + (-cap) % 128)
+        # global-degree normalization (float64 math, cast to float32 —
+        # the same dtypes build_subgraph_rows uses)
+        d_hat = deg + 1.0                        # self loop counts as 1
+        inv_sqrt = 1.0 / np.sqrt(d_hat)
+        ds, dd = self.src.astype(np.int64), dst
+        self._w = {
+            "gcn": (inv_sqrt[dd] * inv_sqrt[ds]).astype(np.float32),
+            "mean": (1.0 / np.maximum(deg, 1.0))[dd].astype(np.float32),
+            "binary": np.ones(len(ds), np.float32),
+        }
+        self.self_w = (inv_sqrt * inv_sqrt).astype(np.float32)
+
+    def aggregate(self, norm: str, H) -> jnp.ndarray:
+        """One Aggregate op over the full register H [n, f], chunked over
+        destination vertices; returns the new [n, f] register."""
+        w_all = self._w[norm]
+        fn = _agg_chunk_fn(self.chunk)
+        out = []
+        for c0, (e0, e1) in zip(self.starts, self.e_ranges):
+            e = e1 - e0
+            src = np.zeros(self.e_cap, np.int32)
+            rel = np.zeros(self.e_cap, np.int32)
+            w = np.zeros(self.e_cap, np.float32)
+            src[:e] = self.src[e0:e1]
+            rel[:e] = (self.dst[e0:e1] - c0).astype(np.int32)
+            w[:e] = w_all[e0:e1]
+            out.append(fn(src, rel, w, H)[:min(self.chunk,
+                                               self.n - c0)])
+        z = jnp.concatenate(out, axis=0) if len(out) > 1 else out[0]
+        if norm == "gcn":
+            # self-loop term: dense mode bakes it into adj, the edge list
+            # excludes it (same convention as the online sg kernel)
+            z = z + H * jnp.asarray(self.self_w)[:, None]
+        return z
+
+    def transform(self, op: Transform, p, H_src, H_in) -> jnp.ndarray:
+        """One Transform op, chunked over vertices (bounds the MXU
+        working set at chunk x max(f_in, f_out))."""
+        b = p[op.b] if op.b else jnp.zeros((), H_src.dtype)
+        fn = _transform_chunk_fn(op.act, op.w_self is not None)
+        out = []
+        for c0 in self.starts:
+            c1 = min(c0 + self.chunk, self.n)
+            if op.w_self:
+                out.append(fn(H_src[c0:c1], H_in[c0:c1], p[op.w],
+                              p[op.w_self], b))
+            else:
+                out.append(fn(H_src[c0:c1], p[op.w], b))
+        return jnp.concatenate(out, axis=0) if len(out) > 1 else out[0]
+
+
+def _apply_section(local: _LocalCSR, ops, p, H, H0):
+    """Run one program section over the full-width registers — the
+    offline mirror of program._compile_section (no mask: every row is a
+    real vertex)."""
+    regs = {"h": H, "h_in": H, "h0": H if H0 is None else H0}
+    for op in ops:
+        if isinstance(op, Aggregate):
+            regs[op.out] = local.aggregate(op.norm, regs[op.src])
+        elif isinstance(op, Residual):
+            scale = (1.0 + p[op.eps_param]) if op.eps_param else 1.0
+            regs[op.into] = scale * regs[op.src] \
+                + op.into_gain * regs[op.into]
+        elif isinstance(op, Transform):
+            regs[op.out] = local.transform(op, p, regs[op.src],
+                                           regs["h_in"])
+        else:                 # pragma: no cover — check_precomputable
+            raise PrecomputeError(f"unsupported op {op!r}")
+    return regs["h"]
+
+
+def layer_major_embeddings(graph, prog: AckProgram, params, *,
+                           chunk_size: int = 2048,
+                           out_ids: Optional[np.ndarray] = None
+                           ) -> np.ndarray:
+    """Offline embeddings for ``out_ids`` (default: every vertex).
+
+    Layer-major schedule: layer0 for all compute-set vertices, then the
+    inner section n_layers - 1 times, then the tail — each Aggregate /
+    Transform chunked over ``chunk_size`` destination vertices.
+    ``params`` must be the UNPADDED model params (the engine's pallas
+    feature padding is an online-batch concern). Returns float32
+    [len(out_ids), f_out].
+    """
+    check_precomputable(prog)
+    # snapshot the CSR arrays: apply_edge_updates swaps whole arrays, so
+    # holding these references pins one coherent graph version
+    snap = SimpleNamespace(indptr=graph.indptr, indices=graph.indices)
+    num_v = len(snap.indptr) - 1
+    if out_ids is None:
+        ids = np.arange(num_v, dtype=np.int64)
+        out_local = slice(None)
+    else:
+        out_ids = np.asarray(out_ids, np.int64)
+        ids = dependency_closure(snap, out_ids, agg_hops(prog))
+        out_local = np.searchsorted(ids, out_ids)
+    local = _LocalCSR(snap, ids, chunk_size)
+    feats = graph.features[ids]
+    H = jnp.asarray(feats, jnp.float32)
+    H = _apply_section(local, prog.layer0, params["layer0"], H, None)
+    if prog.n_layers > 1:
+        H0 = H                # scan-entry prediction, teleport anchor
+        for i in range(prog.n_layers - 1):
+            lp = jax.tree_util.tree_map(lambda a: a[i], params["layers"])
+            H = _apply_section(local, prog.inner, lp, H, H0)
+    emb = H
+    for op in prog.tail:
+        if isinstance(op, Readout):
+            pass              # kind == "target": the row IS the readout
+        elif isinstance(op, Classify):
+            emb = emb @ params[op.w] + params[op.b]
+        else:                 # pragma: no cover — lower() validates tails
+            raise PrecomputeError(f"unsupported tail op {op!r}")
+    return np.asarray(emb, np.float32)[out_local]

@@ -28,9 +28,10 @@ import numpy as np
 from repro.core.config import ServingConfig
 from repro.core.dse import DSEPlan, TPUSpec, explore, validate_models
 from repro.core.engine import DecoupledEngine
-from repro.core.report_schema import (SCHEMA_VERSION, rpc_section,
-                                      shards_section, stages_section,
-                                      store_section, trace_section)
+from repro.core.report_schema import (SCHEMA_VERSION, precompute_section,
+                                      rpc_section, shards_section,
+                                      stages_section, store_section,
+                                      trace_section)
 from repro.obs.hist import LogHistogram, Reservoir
 
 DEFAULT_MODEL = "default"
@@ -214,6 +215,8 @@ class _ModelLane:
                               self.engine._calib)
         if trace is not None:
             r["trace"] = trace
+        if self.engine.precompute is not None:
+            r["precompute"] = precompute_section(self.engine.precompute)
         return r
 
 

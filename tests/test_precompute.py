@@ -1,0 +1,276 @@
+"""Offline precompute tier + hybrid serving: the tier's answers must
+equal the online path's (layer-major propagation == per-batch subgraph
+propagation under full coverage), edge updates must demote exactly the
+dependency ball, refreshed rows must equal a fresh offline build, mixed
+batches must split and rejoin correctly, and the artifact must refuse to
+load against a mutated deployment."""
+import numpy as np
+import pytest
+
+from repro.core.config import ServingConfig
+from repro.core.engine import DecoupledEngine
+from repro.core.program import lower, specialize
+from repro.core.report_schema import SCHEMA, SCHEMA_VERSION
+from repro.gnn.model import GNNConfig, init_gnn
+from repro.graphs.synthetic import DatasetSpec, make_graph
+from repro.precompute import (EmbeddingTier, PrecomputeArtifactError,
+                              PrecomputeConfig, PrecomputeError,
+                              agg_hops)
+
+SPEC = DatasetSpec("tiny", 64, 4.0, 16, 4)
+V = 64
+C = 8
+TARGETS = np.arange(24)
+
+
+def _graph(seed=0):
+    return make_graph(SPEC, seed=seed)
+
+
+def _cfg(kind="sgc", n_layers=2):
+    # receptive_field = V + tiny ppr_eps: the online subgraph is the
+    # FULL graph, so online and offline compute the same function
+    return GNNConfig(kind=kind, n_layers=n_layers, receptive_field=V,
+                     f_in=SPEC.feature_dim, f_hidden=32, ppr_eps=1e-9,
+                     readout="target")
+
+
+def _sc(**kw):
+    kw.setdefault("batch_size", C)
+    kw.setdefault("e_pad", 8192)
+    kw.setdefault("num_threads", 1)
+    return ServingConfig(**kw)
+
+
+@pytest.mark.parametrize("impl", ["xla", "pallas"])
+@pytest.mark.parametrize("kind", ["sgc", "appnp"])
+def test_tier_equals_online(kind, impl):
+    g = _graph()
+    cfg = _cfg(kind)
+    with DecoupledEngine(g, cfg, config=_sc(impl=impl)) as online, \
+            DecoupledEngine(g, cfg, config=_sc(
+                impl=impl, precompute=PrecomputeConfig())) as hybrid:
+        a = online.infer(TARGETS).embeddings
+        b = hybrid.infer(TARGETS).embeddings
+        rep = hybrid.precompute_report()
+    np.testing.assert_allclose(a, b, rtol=1e-4, atol=1e-5)
+    assert rep["hits"] == len(TARGETS) and rep["misses"] == 0
+
+
+def test_tier_equals_online_forced_sg():
+    g = _graph()
+    cfg = _cfg("sgc")
+    with DecoupledEngine(g, cfg, config=_sc(mode="sg")) as online, \
+            DecoupledEngine(g, cfg, config=_sc(
+                mode="sg", precompute=PrecomputeConfig())) as hybrid:
+        np.testing.assert_allclose(online.infer(TARGETS).embeddings,
+                                   hybrid.infer(TARGETS).embeddings,
+                                   rtol=1e-4, atol=1e-5)
+
+
+def test_demotes_exact_dependency_ball():
+    g = _graph(seed=3)
+    cfg = _cfg("gcn", n_layers=2)
+    sc = _sc(precompute=PrecomputeConfig(auto_refresh=False))
+    with DecoupledEngine(g, cfg, config=sc) as eng:
+        hops = agg_hops(eng.program)
+        assert hops == 2            # one Aggregate per executed layer
+        v0 = 11
+        eng.precompute.on_invalidate([v0])
+        # expected ball: BFS within `hops` over the (symmetric) edges
+        ball, frontier = {v0}, {v0}
+        for _ in range(hops):
+            nxt = set()
+            for u in frontier:
+                nxt.update(g.indices[g.indptr[u]:g.indptr[u + 1]].tolist())
+            frontier = nxt - ball
+            ball |= nxt
+        _, fresh = eng.precompute.tier.lookup(np.arange(V))
+        assert set(np.flatnonzero(~fresh).tolist()) == ball
+
+
+def test_post_refresh_equals_fresh_build():
+    g = _graph(seed=4)
+    cfg = _cfg("sgc")
+    params = init_gnn(cfg, __import__("jax").random.PRNGKey(0))
+    sc = _sc(precompute=PrecomputeConfig(auto_refresh=False))
+    with DecoupledEngine(g, cfg, params=params, config=sc) as eng:
+        g.apply_edge_updates(insert=[(5, 9), (2, 40)])
+        assert eng.precompute_report()["demotions"] > 0
+        eng.precompute.drain()
+        rep = eng.precompute_report()
+        assert rep["refresh_backlog"] == 0 and rep["fresh"] == V
+        got = eng.infer(TARGETS).embeddings
+        with DecoupledEngine(g, cfg, params=params, config=_sc(
+                precompute=PrecomputeConfig())) as fresh:
+            want = fresh.infer(TARGETS).embeddings
+    np.testing.assert_allclose(want, got, rtol=1e-4, atol=1e-5)
+
+
+def test_mixed_batch_splits_and_rejoins():
+    g = _graph(seed=5)
+    cfg = _cfg("sgc")
+    params = init_gnn(cfg, __import__("jax").random.PRNGKey(0))
+    sc = _sc(precompute=PrecomputeConfig(auto_refresh=False))
+    with DecoupledEngine(g, cfg, params=params, config=sc) as hybrid, \
+            DecoupledEngine(g, cfg, params=params,
+                            config=_sc()) as online:
+        hybrid.precompute.on_invalidate([7])
+        got = hybrid.infer(TARGETS).embeddings
+        want = online.infer(TARGETS).embeddings
+        rep = hybrid.precompute_report()
+    np.testing.assert_allclose(want, got, rtol=1e-4, atol=1e-5)
+    # genuinely mixed traffic: both routes ran
+    assert rep["hits"] > 0 and rep["misses"] > 0
+
+
+def test_all_fresh_plan_short_circuits_pipeline():
+    g = _graph()
+    cfg = _cfg("sgc")
+    with DecoupledEngine(g, cfg, config=_sc(
+            precompute=PrecomputeConfig())) as eng:
+        plan = eng.plan(np.arange(C))
+        assert plan.tier_done
+        assert plan.tier_rows is not None and plan.tier_fresh.all()
+        # Select/Build/Pack all passed through untouched
+        assert plan.node_lists is None and plan.rows is None \
+            and plan.device is None
+        out = np.asarray(eng.run_device(plan))
+        np.testing.assert_array_equal(out, plan.tier_rows)
+
+
+def test_budget_bytes_caps_residency():
+    g = _graph(seed=6)
+    cfg = _cfg("sgc")
+    params = init_gnn(cfg, __import__("jax").random.PRNGKey(0))
+    budget = 16 * 32 * 4                   # room for 16 of 64 rows
+    with DecoupledEngine(g, cfg, params=params, config=_sc(
+            precompute=PrecomputeConfig(budget_bytes=budget))) as eng, \
+            DecoupledEngine(g, cfg, params=params,
+                            config=_sc()) as online:
+        rep = eng.precompute_report()
+        assert rep["resident"] == 16 and rep["tier_bytes"] <= budget
+        # non-resident vertices are served by the online path, exactly
+        np.testing.assert_allclose(online.infer(TARGETS).embeddings,
+                                   eng.infer(TARGETS).embeddings,
+                                   rtol=1e-4, atol=1e-5)
+        assert eng.precompute_report()["misses"] > 0
+
+
+def test_models_filter_and_unsupported_kind():
+    g = _graph()
+    # excluded kind: engine runs pure online, no tier
+    with DecoupledEngine(g, _cfg("sgc"), config=_sc(
+            precompute=PrecomputeConfig(models=("appnp",)))) as eng:
+        assert eng.precompute is None
+        assert eng.precompute_report() == {"enabled": False}
+    # unsupported program shapes raise actionable errors
+    gat = GNNConfig(kind="gat", n_layers=2, receptive_field=V,
+                    f_in=SPEC.feature_dim, f_hidden=32, readout="target")
+    with pytest.raises(PrecomputeError, match="not precomputable"):
+        DecoupledEngine(g, gat, config=_sc(
+            precompute=PrecomputeConfig()))
+    maxout = GNNConfig(kind="sgc", n_layers=2, receptive_field=V,
+                       f_in=SPEC.feature_dim, f_hidden=32, readout="max")
+    with pytest.raises(PrecomputeError, match="readout"):
+        DecoupledEngine(g, maxout, config=_sc(
+            precompute=PrecomputeConfig()))
+
+
+def test_artifact_roundtrip_and_stale_rejection(tmp_path):
+    from repro.graphs.synthetic import get_graph
+    from repro.precompute import build
+
+    out = str(tmp_path / "tier")
+    rc = build.main(["--dataset", "flickr", "--scale", "0.001",
+                     "--kind", "sgc", "--layers", "2", "--hidden", "32",
+                     "--rf", "32", "--out", out])
+    assert rc == 0
+    g = get_graph("flickr", scale=0.001, seed=0)
+    cfg = GNNConfig(kind="sgc", n_layers=2, receptive_field=32,
+                    f_in=g.feature_dim, f_hidden=32, readout="target")
+    art = _sc(precompute=PrecomputeConfig(artifact=out))
+    t = np.arange(16)
+    with DecoupledEngine(g, cfg, config=art) as loaded, \
+            DecoupledEngine(g, cfg, config=_sc(
+                precompute=PrecomputeConfig())) as built:
+        assert loaded.precompute_report()["builds"] == 0
+        assert built.precompute_report()["builds"] == 1
+        np.testing.assert_array_equal(loaded.infer(t).embeddings,
+                                      built.infer(t).embeddings)
+    # mutate the graph: the stamped artifact must refuse to load, with a
+    # rebuild instruction in the message
+    g2 = make_graph(SPEC, seed=0)
+    cfg2 = GNNConfig(kind="sgc", n_layers=2, receptive_field=32,
+                     f_in=SPEC.feature_dim, f_hidden=32, readout="target")
+    with pytest.raises(PrecomputeArtifactError, match="rebuild"):
+        DecoupledEngine(g2, cfg2, config=art)
+
+
+def test_tier_lookup_and_epoch_guard():
+    tier = EmbeddingTier(8, 4)
+    rows = np.arange(32, dtype=np.float32).reshape(8, 4)
+    tier.install(np.arange(8), rows)
+    got, fresh = tier.lookup(np.array([1, 5]))
+    assert fresh.all()
+    np.testing.assert_array_equal(got, rows[[1, 5]])
+    # a demote between epoch snapshot and promote wins the race
+    epochs = tier.epoch_of(np.array([2, 3]))
+    tier.demote(np.array([3]))
+    tier.promote(np.array([2, 3]), np.zeros((2, 4), np.float32), epochs)
+    _, fresh = tier.lookup(np.array([2, 3]))
+    assert fresh[0] and not fresh[1]
+
+
+def test_calibration_lookup_and_measured_specialize():
+    from repro.obs.calib import CalibrationTable
+
+    t = CalibrationTable()
+    assert t.lookup("Aggregate", "xla/dense") is None
+    for _ in range(8):
+        t.record("Aggregate", "xla/dense", 5, 4e-3)
+        t.record("Aggregate", "xla/sg", 5, 1e-3)
+    assert t.lookup("Aggregate", "xla/sg", 5) < \
+        t.lookup("Aggregate", "xla/dense", 5)
+    assert t.lookup("Aggregate", "xla/sg") is not None   # best bucket
+    cfg = GNNConfig(kind="gcn", n_layers=2, receptive_field=16,
+                    f_in=8, f_hidden=16)
+    # measured cells populated for both modes: they drive the mux
+    _, dec = specialize(lower(cfg), n=16, avg_edges=4.0, f_in=8,
+                        f_hidden=16, measured=t, measured_bucket=5)
+    agg = [d for d in dec if d.mux]
+    assert agg and all(d.mode == "sg" for d in agg)
+    assert all("measured" in d.reason for d in agg)
+    # an explicit force always beats the measured table
+    _, dec = specialize(lower(cfg), n=16, avg_edges=4.0, f_in=8,
+                        f_hidden=16, measured=t, measured_bucket=5,
+                        force="dense")
+    assert all(d.mode == "dense" for d in dec if d.mux)
+    # half-populated cell (missing bucket): FLOP model fallback
+    _, dec = specialize(lower(cfg), n=16, avg_edges=4.0, f_in=8,
+                        f_hidden=16, measured=t, measured_bucket=9)
+    assert all("measured" not in d.reason for d in dec if d.mux)
+
+
+def test_report_schema_section():
+    assert SCHEMA_VERSION == 3
+    g = _graph()
+    with DecoupledEngine(g, _cfg("sgc"), config=_sc(
+            precompute=PrecomputeConfig())) as eng:
+        eng.infer(np.arange(C))
+        rep = eng.precompute_report()
+    assert rep["enabled"] is True
+    assert set(rep) <= set(SCHEMA["precompute"])
+
+
+def test_precompute_config_validation():
+    with pytest.raises(ValueError):
+        PrecomputeConfig(chunk_size=0)
+    with pytest.raises(ValueError):
+        PrecomputeConfig(refresh_workers=0)
+    with pytest.raises(ValueError):
+        PrecomputeConfig(budget_bytes=-1)
+    with pytest.raises(TypeError, match="PrecomputeConfig"):
+        ServingConfig(precompute=42)
+    d = ServingConfig(precompute=PrecomputeConfig()).describe()
+    assert "precompute" in d
