@@ -14,7 +14,7 @@ from __future__ import annotations
 
 import numpy as np
 
-from benchmarks.common import QUICK_SCALE, print_table, save_result
+from benchmarks.common import QUICK_SCALE, print_table, record_trajectory
 from repro.core.subgraph import build_batch
 from repro.graphs.synthetic import get_graph
 
@@ -48,7 +48,7 @@ def run(quick: bool = True):
                        "hybrid_over_unified"])
     assert all(r["hybrid_over_unified"] >= 0.999 for r in rows)
     payload = {"rows": rows, "hybrid_split_FA_frac": round(b1_frac, 4)}
-    save_result("eq1_loadbalance", payload)
+    record_trajectory("eq1_loadbalance", payload)
     return payload
 
 

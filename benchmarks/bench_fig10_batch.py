@@ -4,7 +4,7 @@ from __future__ import annotations
 
 import numpy as np
 
-from benchmarks.common import QUICK_SCALE, print_table, save_result, timeit
+from benchmarks.common import QUICK_SCALE, print_table, record_trajectory, timeit
 from repro.core.config import ServingConfig
 from repro.core.engine import DecoupledEngine
 from repro.gnn.model import GNNConfig
@@ -31,7 +31,7 @@ def run(quick: bool = True):
                      "overlap": res.stats.summary()["stages"]["overlap"]})
     print_table(rows, ["batch", "latency_ms", "ms_per_target", "overlap"])
     payload = {"rows": rows, "model": cfg.display}
-    save_result("fig10_batch", payload)
+    record_trajectory("fig10_batch", payload)
     return payload
 
 

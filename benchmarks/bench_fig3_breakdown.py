@@ -8,7 +8,7 @@ the quantities the paper uses to justify decoupling (§2.2, §3.2).
 from __future__ import annotations
 
 
-from benchmarks.common import QUICK_SCALE, print_table, save_result
+from benchmarks.common import QUICK_SCALE, print_table, record_trajectory
 from repro.core.coupled import receptive_field_size
 from repro.core.subgraph import build_batch
 from repro.graphs.synthetic import get_graph
@@ -63,7 +63,7 @@ def run(quick: bool = True):
     }
     print(claims)
     payload = {"rows": rows, "claims": claims}
-    save_result("fig3_breakdown", payload)
+    record_trajectory("fig3_breakdown", payload)
     return payload
 
 

@@ -10,7 +10,7 @@ from __future__ import annotations
 
 import numpy as np
 
-from benchmarks.common import (QUICK_SCALE, print_table, save_result,
+from benchmarks.common import (QUICK_SCALE, print_table, record_trajectory,
                                timeit)
 from repro.core.dse import TPUSpec, layer_costs
 from repro.core.config import ServingConfig
@@ -74,7 +74,7 @@ def run(quick: bool = True):
                          "subexponential"])
     payload = {"rows": rows, "linearity": checks, "batch": batch,
                "graph": {"v": g.num_vertices, "e": g.num_edges}}
-    save_result("fig8_latency", payload)
+    record_trajectory("fig8_latency", payload)
     return payload
 
 

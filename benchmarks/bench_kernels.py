@@ -15,7 +15,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from benchmarks.common import print_table, save_result
+from benchmarks.common import print_table, record_trajectory
 from repro.core.dse import TPUSpec
 from repro.kernels import ref
 from repro.kernels.fused_gnn import fused_gnn_layer
@@ -83,7 +83,7 @@ def run(quick: bool = True):
     print_table(rows, ["kernel", "cfg", "max_err", "t_compute_us",
                        "t_memory_us", "bound", "intensity"])
     payload = {"rows": rows}
-    save_result("kernels", payload)
+    record_trajectory("kernels", payload)
     # np.max propagates NaN (python max() would drop a non-leading NaN)
     worst = float(np.max([float(r["max_err"]) for r in rows]))
     if not (worst <= 1e-2):

@@ -1,19 +1,22 @@
-"""Observability overhead benchmark: tracing must be near-free.
+"""Observability overhead benchmark: tracing AND metrics must be
+near-free.
 
-The tracing subsystem's contract is (a) bitwise-identical serving
-outputs traced or not, and (b) <5% p50 per-batch overhead at the
-default sample-every-batch setting — otherwise nobody leaves it on and
-the flight recorder never sees the batch you needed. This suite
-measures both, on the same engine shape the pipeline benchmarks use:
+The observability contract is (a) bitwise-identical serving outputs
+instrumented or not, and (b) <5% p50 per-batch overhead — otherwise
+nobody leaves it on and the flight recorder never sees the batch you
+needed. This suite measures both, for both subsystems, on the same
+engine shape the pipeline benchmarks use:
 
-  untraced   ServingConfig(trace=None)          — the baseline
-  traced     ServingConfig(trace=TraceConfig()) — every batch sampled
+  untraced   ServingConfig()                        — the baseline
+  traced     ServingConfig(trace=TraceConfig())     — every batch sampled
+  metered    ServingConfig(telemetry=
+                           TelemetryConfig())       — windowed metrics on
 
-Rounds alternate between the two deployments so clock drift and cache
+Rounds alternate between the deployments so clock drift and cache
 warmth cancel instead of biasing one side. The traced run then exports
 its chrome trace and re-validates it (every B has an E, parent refs
-resolve), and prints the flight recorder's slowest batches and the
-per-op calibration rows.
+resolve); the metered run's exposition text is re-validated with the
+in-repo Prometheus format checker.
 
 Appends ``results/BENCH_obs.json``.
 
@@ -30,16 +33,15 @@ sys.path.insert(0, os.path.dirname(os.path.dirname(os.path.abspath(__file__))))
 
 import numpy as np
 
-from benchmarks.common import (append_trajectory, print_table,
-                               save_result, trajectory_path)
+from benchmarks.common import print_table, record_trajectory
 from repro.core.config import ServingConfig
 from repro.core.engine import DecoupledEngine
 from repro.gnn.model import GNNConfig
 from repro.graphs.synthetic import get_graph, zipf_traffic
-from repro.obs import TraceConfig, validate_chrome_trace
+from repro.obs import (TelemetryConfig, TraceConfig,
+                       validate_chrome_trace, validate_exposition)
 
-TRAJECTORY_PATH = trajectory_path("obs")
-OVERHEAD_BAR = 0.05          # traced p50 may exceed untraced p50 by 5%
+OVERHEAD_BAR = 0.05          # instrumented p50 may exceed baseline by 5%
 ROUNDS = 4                   # alternating measurement rounds per mode
 
 
@@ -84,6 +86,10 @@ def run(requests: int = 1024, batch_size: int = 8, scale: float = 0.01,
             g, cfg, params=params,
             config=ServingConfig(batch_size=batch_size, num_threads=2,
                                  trace=TraceConfig())),
+        "metered": DecoupledEngine(
+            g, cfg, params=params,
+            config=ServingConfig(batch_size=batch_size, num_threads=2,
+                                 telemetry=TelemetryConfig())),
     }
     lat = {name: [] for name in engines}
     try:
@@ -91,6 +97,7 @@ def run(requests: int = 1024, batch_size: int = 8, scale: float = 0.01,
         refs = {name: eng.infer(check, overlap=False).embeddings
                 for name, eng in engines.items()}
         np.testing.assert_array_equal(refs["untraced"], refs["traced"])
+        np.testing.assert_array_equal(refs["untraced"], refs["metered"])
         for name, eng in engines.items():       # compile + warm caches
             _drive(eng, warm)
         for r in range(ROUNDS):                 # interleave the modes
@@ -100,26 +107,34 @@ def run(requests: int = 1024, batch_size: int = 8, scale: float = 0.01,
         traced = engines["traced"]
         rep = traced.trace_report()
         tree = traced.export_trace(trace_out)
+        exposition = engines["metered"].metrics_text()
+        n_series = exposition.count("# TYPE")
     finally:
         for eng in engines.values():
             eng.close()
 
     problems = validate_chrome_trace(tree)
     assert problems == [], f"chrome trace invalid: {problems[:5]}"
+    expo_problems = validate_exposition(exposition)
+    assert expo_problems == [], \
+        f"exposition invalid: {expo_problems[:5]}"
     p = {name: {q: float(np.percentile(v, q))
                 for q in (50, 90, 99)} for name, v in lat.items()}
     overhead = p["traced"][50] / p["untraced"][50] - 1.0
+    m_overhead = p["metered"][50] / p["untraced"][50] - 1.0
     rows = [{"mode": name,
              "p50_ms": round(p[name][50] * 1e3, 3),
              "p90_ms": round(p[name][90] * 1e3, 3),
              "p99_ms": round(p[name][99] * 1e3, 3),
              "batches": len(lat[name])} for name in lat]
     print_table(rows, ["mode", "p50_ms", "p90_ms", "p99_ms", "batches"])
-    print(f"tracing p50 overhead: {overhead:+.2%} (bar "
-          f"{OVERHEAD_BAR:.0%}) | {rep['spans']} spans recorded, "
-          f"ring dropped {rep['spans_dropped']}")
-    print(f"bitwise traced == untraced OK; chrome trace valid -> "
-          f"{trace_out}")
+    print(f"tracing p50 overhead: {overhead:+.2%}, metrics "
+          f"{m_overhead:+.2%} (bar {OVERHEAD_BAR:.0%}) | "
+          f"{rep['spans']} spans recorded, ring dropped "
+          f"{rep['spans_dropped']} | {n_series} metric families "
+          f"exposed, format valid")
+    print(f"bitwise traced == metered == untraced OK; chrome trace "
+          f"valid -> {trace_out}")
     for e in rep["flight"]["slowest"][:3]:
         print(f"  flight: seq={e['meta'].get('seq')} "
               f"dur={e['dur'] * 1e3:.3f}ms spans={e['spans']}")
@@ -127,8 +142,14 @@ def run(requests: int = 1024, batch_size: int = 8, scale: float = 0.01,
         f"tracing adds {overhead:.2%} to p50 "
         f"({p['traced'][50] * 1e3:.3f}ms vs "
         f"{p['untraced'][50] * 1e3:.3f}ms); bar is {OVERHEAD_BAR:.0%}")
+    assert m_overhead < OVERHEAD_BAR, (
+        f"metrics add {m_overhead:.2%} to p50 "
+        f"({p['metered'][50] * 1e3:.3f}ms vs "
+        f"{p['untraced'][50] * 1e3:.3f}ms); bar is {OVERHEAD_BAR:.0%}")
 
     payload = {"rows": rows, "p50_overhead": round(overhead, 4),
+               "metrics_p50_overhead": round(m_overhead, 4),
+               "metric_families": n_series,
                "overhead_bar": OVERHEAD_BAR,
                "spans": rep["spans"],
                "spans_dropped": rep["spans_dropped"],
@@ -138,11 +159,10 @@ def run(requests: int = 1024, batch_size: int = 8, scale: float = 0.01,
                "requests": requests, "batch_size": batch_size,
                "receptive_field": receptive_field,
                "num_vertices": g.num_vertices}
-    save_result("obs", payload)
-    path = append_trajectory(
-        dict(payload, timestamp=time.strftime("%Y-%m-%dT%H:%M:%S")),
-        TRAJECTORY_PATH)
-    print(f"\ntrajectory appended to {path}")
+    record_trajectory(
+        "obs", payload,
+        regress={"traced_p50_ms": p["traced"][50] * 1e3,
+                 "metered_p50_ms": p["metered"][50] * 1e3})
     return payload
 
 

@@ -31,8 +31,7 @@ sys.path.insert(0, os.path.dirname(os.path.dirname(os.path.abspath(__file__))))
 
 import numpy as np
 
-from benchmarks.common import (append_trajectory, print_table,
-                               save_result, trajectory_path)
+from benchmarks.common import print_table, record_trajectory
 from repro.core.config import ServingConfig
 from repro.core.engine import DecoupledEngine
 from repro.core.scheduler import PipelineScheduler
@@ -40,7 +39,6 @@ from repro.gnn.model import GNNConfig
 from repro.graphs.synthetic import get_graph, zipf_traffic
 from repro.store import StorePolicy
 
-TRAJECTORY_PATH = trajectory_path("pipeline")
 
 
 def make_policies(nbr_capacity: int) -> dict:
@@ -152,11 +150,11 @@ def run(requests: int = 4096, batch_size: int = 16, scale: float = 0.05,
                "receptive_field": receptive_field,
                "num_vertices": g.num_vertices,
                "feature_dim": g.feature_dim}
-    save_result("pipeline", payload)
-    path = append_trajectory(
-        dict(payload, timestamp=time.strftime("%Y-%m-%dT%H:%M:%S")),
-        TRAJECTORY_PATH)
-    print(f"\ntrajectory appended to {path}")
+    record_trajectory(
+        "pipeline", payload,
+        regress={"staged_rows_p50_ms": by["staged+rows"]["p50_ms"],
+                 "staged_rows_host_ms":
+                     by["staged+rows"]["host_ms_per_batch"]})
     return payload
 
 

@@ -32,15 +32,13 @@ sys.path.insert(0, os.path.dirname(os.path.dirname(os.path.abspath(__file__))))
 
 import numpy as np
 
-from benchmarks.common import (append_trajectory, print_table,
-                               save_result, trajectory_path)
+from benchmarks.common import print_table, record_trajectory
 from repro.core.config import ServingConfig
 from repro.core.engine import DecoupledEngine
 from repro.gnn.model import GNNConfig
 from repro.graphs.synthetic import get_graph, zipf_traffic
 from repro.precompute import PrecomputeConfig
 
-TRAJECTORY_PATH = trajectory_path("precompute")
 SPEEDUP_BAR = 5.0            # fast-path p50 must be >= 5x below online
 ROUNDS = 4                   # alternating measurement rounds per mode
 
@@ -207,11 +205,7 @@ def run_suite(quick: bool = True):
     else:
         payload = run(requests=1024, batch_size=8, scale=0.01)
         payload["refresh"] = run_refresh(rates=(1, 4, 16, 64))
-    save_result("precompute", payload)
-    path = append_trajectory(
-        dict(payload, timestamp=time.strftime("%Y-%m-%dT%H:%M:%S")),
-        TRAJECTORY_PATH)
-    print(f"\ntrajectory appended to {path}")
+    record_trajectory("precompute", payload)
     return payload
 
 
@@ -228,7 +222,4 @@ if __name__ == "__main__":
         payload = run(requests=a.requests, batch_size=a.batch_size,
                       scale=0.01)
         payload["refresh"] = run_refresh(rates=(1, 4, 16, 64))
-        save_result("precompute", payload)
-        append_trajectory(
-            dict(payload, timestamp=time.strftime("%Y-%m-%dT%H:%M:%S")),
-            TRAJECTORY_PATH)
+        record_trajectory("precompute", payload)

@@ -27,15 +27,13 @@ sys.path.insert(0, os.path.dirname(os.path.dirname(os.path.abspath(__file__))))
 
 import numpy as np
 
-from benchmarks.common import (append_trajectory, print_table,
-                               save_result, trajectory_path)
+from benchmarks.common import print_table, record_trajectory
 from repro.core.config import ServingConfig
 from repro.core.engine import DecoupledEngine
 from repro.gnn.model import GNNConfig
 from repro.graphs.csr import from_edge_list
 from repro.graphs.synthetic import get_graph
 
-TRAJECTORY_PATH = trajectory_path("program")
 
 KINDS = ("gcn", "sage", "gin", "gat")
 
@@ -135,11 +133,7 @@ def run(requests: int = 256, batch_size: int = 8, scale: float = 0.02,
                "dense_regime": dense_rows, "sparse_regime": sparse_rows,
                "sparse_auto_ops": sparse_ops,
                "mixed_program_kinds": sorted(mixed)}
-    save_result("program", payload)
-    path = append_trajectory(
-        dict(payload, timestamp=time.strftime("%Y-%m-%dT%H:%M:%S")),
-        TRAJECTORY_PATH)
-    print(f"\ntrajectory appended to {path}")
+    record_trajectory("program", payload)
     return payload
 
 

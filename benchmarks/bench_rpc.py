@@ -52,15 +52,13 @@ sys.path.insert(0, os.path.dirname(os.path.dirname(os.path.abspath(__file__))))
 
 import numpy as np
 
-from benchmarks.common import (append_trajectory, print_table,
-                               save_result, trajectory_path)
+from benchmarks.common import print_table, record_trajectory
 from repro.core.config import ServingConfig
 from repro.core.engine import DecoupledEngine
 from repro.gnn.model import GNNConfig
 from repro.graphs.synthetic import get_graph, zipf_traffic
 from repro.store import StorePolicy
 
-TRAJECTORY_PATH = trajectory_path("rpc")
 BITWISE_BATCHES = 20
 
 
@@ -219,11 +217,7 @@ def run(requests: int = 2048, batch_size: int = 8, scale: float = 0.01,
                "receptive_field": receptive_field,
                "bitwise_batches": BITWISE_BATCHES,
                "num_vertices": g.num_vertices, "zipf_a": zipf_a}
-    save_result("rpc", payload)
-    path = append_trajectory(
-        dict(payload, timestamp=time.strftime("%Y-%m-%dT%H:%M:%S")),
-        TRAJECTORY_PATH)
-    print(f"\ntrajectory appended to {path}")
+    record_trajectory("rpc", payload)
     return payload
 
 

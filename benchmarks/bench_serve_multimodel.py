@@ -19,7 +19,7 @@ sys.path.insert(0, os.path.dirname(os.path.dirname(os.path.abspath(__file__))))
 
 import numpy as np
 
-from benchmarks.common import print_table, save_result
+from benchmarks.common import print_table, record_trajectory
 from repro.core.config import ServingConfig
 from repro.core.engine import DecoupledEngine
 from repro.gnn.model import GNNConfig
@@ -85,7 +85,7 @@ def run(requests: int = 384, batch_size: int = 16, scale: float = 0.03,
     payload = {"rows": rows, "wall_s": wall,
                "req_per_s": requests / wall, "plan": rep["plan"],
                "batch_size": batch_size, "requests": requests}
-    save_result("serve_multimodel", payload)
+    record_trajectory("serve_multimodel", payload)
     for eng in engines.values():
         eng.close()
     return payload

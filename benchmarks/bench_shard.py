@@ -27,15 +27,13 @@ sys.path.insert(0, os.path.dirname(os.path.dirname(os.path.abspath(__file__))))
 
 import numpy as np
 
-from benchmarks.common import (append_trajectory, print_table,
-                               save_result, trajectory_path)
+from benchmarks.common import print_table, record_trajectory
 from repro.core.config import ServingConfig
 from repro.core.engine import DecoupledEngine
 from repro.gnn.model import GNNConfig
 from repro.graphs.synthetic import get_graph, zipf_traffic
 from repro.store import StorePolicy
 
-TRAJECTORY_PATH = trajectory_path("shard")
 
 
 def make_policies(shard_budget: int, nbr_capacity: int) -> dict:
@@ -166,11 +164,7 @@ def run(requests: int = 4096, batch_size: int = 16, scale: float = 0.05,
                "feature_dim": g.feature_dim,
                "matrix_bytes": matrix_bytes,
                "shard_budget_bytes": shard_budget}
-    save_result("shard", payload)
-    path = append_trajectory(
-        dict(payload, timestamp=time.strftime("%Y-%m-%dT%H:%M:%S")),
-        TRAJECTORY_PATH)
-    print(f"\ntrajectory appended to {path}")
+    record_trajectory("shard", payload)
     return payload
 
 

@@ -32,15 +32,13 @@ sys.path.insert(0, os.path.dirname(os.path.dirname(os.path.abspath(__file__))))
 
 import numpy as np
 
-from benchmarks.common import (append_trajectory, print_table,
-                               save_result, trajectory_path)
+from benchmarks.common import print_table, record_trajectory
 from repro.core.config import ServingConfig
 from repro.core.engine import DecoupledEngine
 from repro.gnn.model import GNNConfig
 from repro.graphs.synthetic import get_graph, zipf_traffic
 from repro.store import StorePolicy
 
-TRAJECTORY_PATH = trajectory_path("store")
 
 
 def make_policies(nbr_capacity: int) -> dict:
@@ -138,11 +136,9 @@ def run(requests: int = 4096, batch_size: int = 16, scale: float = 0.05,
                "nbr_capacity": nbr_capacity,
                "num_vertices": g.num_vertices,
                "feature_dim": g.feature_dim}
-    save_result("store", payload)
-    path = append_trajectory(
-        dict(payload, timestamp=time.strftime("%Y-%m-%dT%H:%M:%S")),
-        TRAJECTORY_PATH)
-    print(f"\ntrajectory appended to {path}")
+    best = min(r["p50_ms"] for r in rows)
+    record_trajectory("store", payload,
+                      regress={"best_policy_p50_ms": best})
     return payload
 
 

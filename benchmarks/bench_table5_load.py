@@ -12,7 +12,7 @@ import time
 import jax
 import numpy as np
 
-from benchmarks.common import QUICK_SCALE, print_table, save_result
+from benchmarks.common import QUICK_SCALE, print_table, record_trajectory
 from repro.core.subgraph import build_batch
 from repro.graphs.synthetic import get_graph
 
@@ -63,7 +63,7 @@ def run(quick: bool = True):
                         "t_load_reduction"])
     # paper property: load time scales ~O(N f + N^2) and stays 10s of us
     payload = {"rows": rows, "dedup": dedup, "pcie_bw": PCIE_BW, "t_fixed_us": 0.35}
-    save_result("table5_load", payload)
+    record_trajectory("table5_load", payload)
     return payload
 
 

@@ -7,7 +7,7 @@ import time
 
 import numpy as np
 
-from benchmarks.common import QUICK_SCALE, print_table, save_result
+from benchmarks.common import QUICK_SCALE, print_table, record_trajectory
 from repro.core.ini import ini_batch, select_important
 from repro.graphs.synthetic import get_graph
 
@@ -33,7 +33,7 @@ def run(quick: bool = True):
     print_table(rows, ["dataset", "us_per_vertex_1thread",
                        "us_per_vertex_8threads", "vertices", "avg_degree"])
     payload = {"rows": rows}
-    save_result("table6_ini", payload)
+    record_trajectory("table6_ini", payload)
     return payload
 
 

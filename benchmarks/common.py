@@ -1,14 +1,24 @@
-"""Shared benchmark utilities: timing, result persistence, dataset prep."""
+"""Shared benchmark utilities: timing, result persistence, dataset prep.
+
+Result persistence is ONE writer: ``record_trajectory(name, payload)``
+appends a timestamped record to the tracked append-only trajectory
+``results/BENCH_<name>.json`` (a JSON list, one entry per run). The old
+dual scheme — a per-run snapshot under ``results/bench/`` PLUS the
+trajectory — left a stray untracked tree in every checkout; the
+trajectory's newest entry IS the latest snapshot, so the snapshot dir is
+gone. Pass ``regress={...}`` with lower-is-better scalars to gate the
+run against its own history via ``python -m repro.obs.regress``.
+"""
 from __future__ import annotations
 
 import json
 import os
 import time
-from typing import Callable, Dict
+from typing import Callable, Dict, Optional
 
 import numpy as np
 
-RESULTS_DIR = os.environ.get("REPRO_BENCH_DIR", "results/bench")
+RESULTS_DIR = os.environ.get("REPRO_BENCH_DIR", "results")
 
 # container-scale dataset knobs (full-scale graphs exceed 1-core CPU time
 # budgets; degree structure and feature dims are preserved)
@@ -29,25 +39,22 @@ def timeit(fn: Callable, *, warmup: int = 1, iters: int = 3) -> Dict:
             "std_s": float(a.std()), "iters": iters}
 
 
-def save_result(name: str, payload: dict):
-    os.makedirs(RESULTS_DIR, exist_ok=True)
-    path = os.path.join(RESULTS_DIR, f"{name}.json")
-    with open(path, "w") as f:
-        json.dump(payload, f, indent=1, default=float)
-    return path
-
-
 def trajectory_path(name: str) -> str:
-    """Per-suite trajectory artifact beside the per-run payload dir,
-    governed by the SAME knob (REPRO_BENCH_DIR via RESULTS_DIR):
-    default results/bench/ -> results/BENCH_<name>.json."""
-    return os.path.join(os.path.dirname(RESULTS_DIR.rstrip("/")) or ".",
-                        f"BENCH_{name}.json")
+    """The tracked trajectory artifact for one suite, governed by
+    REPRO_BENCH_DIR (default results/): results/BENCH_<name>.json."""
+    return os.path.join(RESULTS_DIR, f"BENCH_{name}.json")
 
 
-def append_trajectory(record: dict, path: str):
-    """Append one run record to a JSON-list trajectory file (created on
-    first use; unreadable/corrupt files restart the list)."""
+def record_trajectory(name: str, payload: dict,
+                      regress: Optional[dict] = None) -> str:
+    """Append one timestamped run record to the suite's trajectory (the
+    ONE benchmark writer; created on first use, unreadable/corrupt files
+    restart the list). ``regress`` carries this run's lower-is-better
+    gate scalars for ``python -m repro.obs.regress``."""
+    record = dict(payload, timestamp=time.strftime("%Y-%m-%dT%H:%M:%S"))
+    if regress:
+        record["regress"] = {k: float(v) for k, v in regress.items()}
+    path = trajectory_path(name)
     os.makedirs(os.path.dirname(path) or ".", exist_ok=True)
     runs = []
     if os.path.exists(path):
@@ -61,6 +68,7 @@ def append_trajectory(record: dict, path: str):
     runs.append(record)
     with open(path, "w") as f:
         json.dump(runs, f, indent=1, default=float)
+    print(f"trajectory appended to {path}")
     return path
 
 

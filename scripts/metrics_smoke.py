@@ -1,0 +1,76 @@
+"""CI metrics smoke: serve, scrape the live endpoint, validate.
+
+Boots a GNNServer with telemetry on (ephemeral exposition port) over an
+``inproc`` graph host (full wire codec, one process — so the cluster
+scrape path and graph-host registry both light up), drives enough
+traffic to populate every instrumented site, then scrapes the real HTTP
+endpoint the way Prometheus would and runs the in-repo exposition
+validator over the body. Fails (exit 1 via assert) if the endpoint is
+down, the text is malformed, or fewer than ``MIN_SERIES`` series show
+up — the "did someone unplug a metric family" canary.
+
+    python scripts/metrics_smoke.py
+"""
+from __future__ import annotations
+
+import os
+import sys
+import urllib.request
+
+sys.path.insert(0, os.path.join(
+    os.path.dirname(os.path.dirname(os.path.abspath(__file__))), "src"))
+
+MIN_SERIES = 20
+
+
+def main() -> int:
+    import jax
+
+    from repro.core.config import ServingConfig
+    from repro.gnn.model import GNNConfig, init_gnn
+    from repro.graphs.synthetic import get_graph, zipf_traffic
+    from repro.obs import TelemetryConfig, validate_exposition
+    from repro.obs.metrics import series_count
+    from repro.serve.gnn_server import GNNServer
+
+    g = get_graph("flickr", scale=0.004, seed=0)
+    cfg = GNNConfig(kind="gcn", n_layers=2, receptive_field=16,
+                    f_in=g.feature_dim)
+    params = init_gnn(cfg, jax.random.PRNGKey(0))
+    sc = ServingConfig(batch_size=8, num_threads=2, transport="inproc",
+                      telemetry=TelemetryConfig(port=0, window_s=5.0))
+    server = GNNServer(config=sc)
+    server.register("gcn", graph=g, cfg=cfg, params=params)
+    server.start()
+    try:
+        reqs = [server.submit(int(t), model="gcn")
+                for t in zipf_traffic(g, 128, 1.1, 1)]
+        server.drain(reqs, timeout=300.0)
+
+        url = server.metrics_url
+        assert url, "telemetry port configured but no endpoint mounted"
+        with urllib.request.urlopen(url, timeout=10) as resp:
+            assert resp.status == 200, f"GET {url} -> {resp.status}"
+            ctype = resp.headers.get("Content-Type", "")
+            body = resp.read().decode("utf-8")
+        assert "version=0.0.4" in ctype, f"content-type: {ctype!r}"
+
+        problems = validate_exposition(body)
+        assert not problems, f"exposition invalid: {problems[:5]}"
+        n = series_count(server.metrics_wire())
+        families = sorted({ln.split()[2] for ln in body.splitlines()
+                           if ln.startswith("# TYPE ")})
+        print(f"scraped {url}: {n} series across {len(families)} "
+              f"families, exposition valid")
+        for fam in families:
+            print(f"  {fam}")
+        assert n >= MIN_SERIES, \
+            f"only {n} series exposed (floor {MIN_SERIES})"
+    finally:
+        server.stop()
+    print("metrics smoke: ok")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

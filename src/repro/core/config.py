@@ -68,6 +68,10 @@ class ServingConfig:
     # PrecomputeConfig enables the offline layer-major embedding tier
     # + hybrid routing (precompute package)
     precompute: Optional[object] = None
+    # telemetry: None (default) = metrics off, zero-cost; a
+    # TelemetryConfig enables windowed metrics + Prometheus exposition
+    # + SLO burn rates + the regression watchdog (obs package)
+    telemetry: Optional[object] = None
 
     def __post_init__(self):
         if self.trace is not None:
@@ -76,6 +80,12 @@ class ServingConfig:
                 raise TypeError(
                     f"trace must be an obs.TraceConfig or None, got "
                     f"{type(self.trace).__name__}")
+        if self.telemetry is not None:
+            from repro.obs.metrics import TelemetryConfig
+            if not isinstance(self.telemetry, TelemetryConfig):
+                raise TypeError(
+                    f"telemetry must be an obs.TelemetryConfig or None, "
+                    f"got {type(self.telemetry).__name__}")
         if self.precompute is not None:
             from repro.precompute.config import PrecomputeConfig
             if not isinstance(self.precompute, PrecomputeConfig):
@@ -165,6 +175,8 @@ class ServingConfig:
             d["trace"] = self.trace.describe()
         if self.precompute is not None:
             d["precompute"] = self.precompute.describe()
+        if self.telemetry is not None:
+            d["telemetry"] = self.telemetry.describe()
         if self.remote:
             d.update(endpoints=list(self.endpoints) or ["inproc"],
                      rpc_timeout_s=self.rpc_timeout_s,

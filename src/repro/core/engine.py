@@ -21,6 +21,7 @@ from __future__ import annotations
 
 import functools
 import threading
+import time
 from concurrent.futures import ThreadPoolExecutor
 from dataclasses import dataclass
 from typing import Dict, Optional
@@ -81,6 +82,17 @@ class DecoupledEngine:
             self.tracer = None
             self._calib = None
         self._calib_count = 0
+        # live telemetry plane (same contract: off by default, every
+        # hot-path site guards on ``telemetry is None``)
+        if config.telemetry is not None:
+            from repro.obs.metrics import Telemetry
+            self.telemetry = Telemetry(config.telemetry, host="client")
+            self._h_gather = self.telemetry.whist(
+                "repro_store_gather_seconds",
+                help="device-side feature gather wall time")
+        else:
+            self.telemetry = None
+            self._h_gather = None
         self.batch_size = config.batch_size
         self.num_threads = config.num_threads
         self.impl = config.impl
@@ -203,7 +215,9 @@ class DecoupledEngine:
             self.stages, self.run_device, depth=config.depth,
             max_inflight=config.max_inflight,
             on_batch=self._on_batch_done if self._repin_auto else None,
-            tracer=self.tracer)
+            tracer=self.tracer, telemetry=self.telemetry)
+        if self.telemetry is not None:
+            self._register_metrics()
         # graph-update streaming: CSRGraph.apply_edge_updates notifies us
         # so cached neighborhoods / resident rows never serve stale state
         if hasattr(graph, "register_listener"):
@@ -224,6 +238,103 @@ class DecoupledEngine:
                         max(1, policy.nbr_capacity // 4))
                 pinned = np.argpartition(self.graph.degrees, -k)[-k:]
         return NeighborhoodCache(policy.nbr_capacity, pinned_targets=pinned)
+
+    def _register_metrics(self):
+        """Join the existing subsystem counters to the telemetry plane
+        as collect-time callbacks: the hot path increments nothing
+        twice — the registry samples each source at scrape/report time,
+        so metered serving stays bitwise-identical to unmetered."""
+        reg = self.telemetry.registry
+        stats = self.scheduler.stats
+        src = self._fsource
+        if self.nbr_cache is not None:
+            c = self.nbr_cache
+            reg.counter_fn("repro_nbr_cache_hits_total",
+                           lambda: c.hits, help="neighborhood cache hits")
+            reg.counter_fn("repro_nbr_cache_misses_total",
+                           lambda: c.misses,
+                           help="neighborhood cache misses")
+            reg.counter_fn("repro_nbr_cache_evictions_total",
+                           lambda: c.evictions,
+                           help="neighborhood cache evictions")
+        if self.sg_cache is not None:
+            rc = self.sg_cache
+            reg.counter_fn("repro_row_cache_hits_total",
+                           lambda: rc.hits,
+                           help="subgraph-row cache hits")
+            reg.counter_fn("repro_row_cache_misses_total",
+                           lambda: rc.misses,
+                           help="subgraph-row cache misses")
+        if hasattr(src, "lookups"):
+            reg.counter_fn("repro_store_lookups_total",
+                           lambda: src.lookups,
+                           help="feature rows resolved")
+            reg.counter_fn("repro_store_resident_lookups_total",
+                           lambda: src.resident_lookups,
+                           help="feature rows served device-resident")
+        reg.counter_fn("repro_store_bytes_shipped_total",
+                       lambda: stats.bytes_shipped,
+                       help="host->device bytes actually shipped")
+        reg.counter_fn("repro_store_bytes_dense_total",
+                       lambda: stats.bytes_dense,
+                       help="dense-baseline host->device bytes")
+        if self._repin_auto:
+            reg.counter_fn("repro_auto_repins_total",
+                           lambda: self.auto_repins,
+                           help="automatic residency rebalances")
+        if self.precompute is not None:
+            tier, mgr = self.precompute.tier, self.precompute
+            reg.counter_fn("repro_tier_hits_total", lambda: tier.hits,
+                           help="embedding-tier fresh hits")
+            reg.counter_fn("repro_tier_misses_total",
+                           lambda: tier.misses,
+                           help="embedding-tier misses (online path)")
+            reg.counter_fn("repro_tier_demotions_total",
+                           lambda: tier.demotions,
+                           help="tier rows demoted by invalidation")
+            reg.counter_fn("repro_tier_promotions_total",
+                           lambda: tier.promotions,
+                           help="tier rows re-promoted by refresh")
+            reg.counter_fn("repro_refresh_chunks_total",
+                           lambda: mgr.refresh_chunks,
+                           help="background refresh chunks completed")
+            reg.counter_fn("repro_refresh_errors_total",
+                           lambda: mgr.refresh_errors,
+                           help="background refresh chunk failures")
+            reg.gauge_fn("repro_refresh_backlog",
+                         lambda: len(mgr._backlog),
+                         help="vertices awaiting tier refresh")
+        if self._host_pool is not None:
+            reg.counter_fn("repro_rpc_calls_total",
+                           lambda: stats.rpc_calls,
+                           help="remote stage calls")
+            reg.counter_fn("repro_rpc_retries_total",
+                           lambda: stats.rpc_retries,
+                           help="remote stage call retries")
+            reg.counter_fn("repro_rpc_timeouts_total",
+                           lambda: stats.rpc_timeouts,
+                           help="remote stage call timeouts")
+            reg.counter_fn("repro_rpc_errors_total",
+                           lambda: stats.rpc_errors,
+                           help="remote stage call errors")
+            reg.counter_fn("repro_rpc_bytes_out_total",
+                           lambda: stats.rpc_bytes_out,
+                           help="bytes sent to graph hosts")
+            reg.counter_fn("repro_rpc_bytes_in_total",
+                           lambda: stats.rpc_bytes_in,
+                           help="bytes received from graph hosts")
+            quarantines = self.telemetry.counter(
+                "repro_host_quarantines_total",
+                help="graph-host quarantine episodes")
+            events = self.telemetry.events
+
+            def _on_quarantine(endpoint: str):
+                quarantines.inc()
+                events.emit("host_quarantine", severity="warn",
+                            message=f"graph host {endpoint} quarantined",
+                            endpoint=endpoint)
+
+            self._host_pool.on_quarantine = _on_quarantine
 
     # -- device program ----------------------------------------------------
     def _forward(self, params, batch: Dict[str, jax.Array]):
@@ -310,6 +421,8 @@ class DecoupledEngine:
         tr = self.tracer
         if all(k in db for k in src.payload_keys):
             payload = {k: db.pop(k) for k in src.payload_keys}
+            tg = time.perf_counter() if self._h_gather is not None \
+                else 0.0
             if tr is None:
                 feats = src.device_feats(payload)
             else:
@@ -318,6 +431,8 @@ class DecoupledEngine:
                 with tr.span("store.gather", cat="store",
                              store=src.name):
                     feats = src.device_feats(payload)
+            if self._h_gather is not None:
+                self._h_gather.record(time.perf_counter() - tg)
         else:       # externally built dense batch (e.g. device_batch())
             feats = db["feats"]
         db["feats"] = self._pad_feature_dim(feats)
@@ -517,6 +632,41 @@ class DecoupledEngine:
                                   metadata={"config":
                                             self.config.describe()})
 
+    def telemetry_report(self) -> dict:
+        """Live telemetry state of this deployment (the ``telemetry.*``
+        schema section): windowed metric snapshot, SLO burn-rate rows,
+        watchdog state, and the event ring. ``{"enabled": False}`` when
+        the deployment was built without ``ServingConfig(telemetry=...)``.
+        """
+        if self.telemetry is None:
+            return {"enabled": False}
+        from repro.core.report_schema import telemetry_section
+        return telemetry_section(self.telemetry)
+
+    def metrics_wire(self, cluster: bool = True) -> dict:
+        """This deployment's metrics in wire form. With ``cluster=True``
+        on a multi-host deployment, every graph host's registry is
+        scraped over the ``metrics`` RPC (best-effort broadcast) and
+        merged losslessly into one cluster view — per-host histograms
+        fold bucket-by-bucket, so the merged count is exactly the sum of
+        the per-host counts."""
+        if self.telemetry is None:
+            raise ValueError(
+                "telemetry is off; construct the engine with "
+                "ServingConfig(telemetry=TelemetryConfig(...))")
+        local = self.telemetry.to_wire()
+        if not cluster or self._host_pool is None:
+            return local
+        from repro.obs.metrics import merge_wire
+        remote = self._host_pool.broadcast("metrics", None)
+        return merge_wire([local] + [r for r in remote if r])
+
+    def metrics_text(self, cluster: bool = True) -> str:
+        """Prometheus text exposition of ``metrics_wire()`` (what an
+        HTTP ``/metrics`` endpoint serves for this deployment)."""
+        from repro.obs.promexp import render_wire
+        return render_wire(self.metrics_wire(cluster=cluster))
+
     def precompute_report(self) -> dict:
         """Embedding-tier state of this deployment (the ``precompute.*``
         schema section): residency, freshness, hit/demotion counters and
@@ -532,6 +682,8 @@ class DecoupledEngine:
         if self.precompute is not None:
             self.precompute.close()
         self.scheduler.close()
+        if self.telemetry is not None:
+            self.telemetry.close()
         if self._repin_pool is not None:
             self._repin_pool.shutdown(wait=True)
         for stage in self.stages:

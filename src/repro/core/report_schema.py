@@ -30,6 +30,10 @@ can detect drift:
               residency / freshness / generation, tier hit + demotion +
               promotion counters, refresh backlog and chunk counts, and
               the tier's resident bytes
+  telemetry.* live telemetry plane (ServingConfig(telemetry=...)):
+              windowed metrics snapshot (counters / gauges / histogram
+              quantiles over the sliding window), SLO burn-rate rows,
+              watchdog state, and the structured event ring summary
 
 Section builders take a ``SchedulerStats``-shaped object (duck-typed to
 avoid an import cycle with core.scheduler) and return plain dicts;
@@ -47,12 +51,16 @@ Version history:
   3  hybrid precompute serving: new optional ``precompute`` section
      (emitted only on deployments with an embedding tier). Existing
      keys unchanged — additive, like the v2 bump.
+  4  live telemetry plane: new optional ``telemetry`` section (emitted
+     only on deployments with ServingConfig(telemetry=...)) carrying
+     the windowed metrics snapshot, SLO burn rates, watchdog summary,
+     and event ring. Existing keys unchanged — additive again.
 """
 from __future__ import annotations
 
 from typing import Optional
 
-SCHEMA_VERSION = 3
+SCHEMA_VERSION = 4
 
 # documented key map (stable contract; bump SCHEMA_VERSION on change)
 SCHEMA = {
@@ -75,6 +83,9 @@ SCHEMA = {
                    "refresh_chunks", "refresh_backlog",
                    "refresh_errors", "tier_bytes", "generation",
                    "builds"),
+    "telemetry": ("enabled", "host", "window_s", "windows", "series",
+                  "counters", "gauges", "hists", "slo", "watchdog",
+                  "evaluations", "events"),
 }
 
 
@@ -136,6 +147,14 @@ def precompute_section(manager) -> dict:
     return manager.report()
 
 
+def telemetry_section(telemetry) -> Optional[dict]:
+    """The ``telemetry.*`` section of a metered deployment (None when
+    telemetry is off — the section is omitted, like ``trace``)."""
+    if telemetry is None:
+        return None
+    return telemetry.report()
+
+
 def scheduler_summary(stats) -> dict:
     """The full nested summary a ``SchedulerStats`` emits."""
     d = {"schema_version": SCHEMA_VERSION,
@@ -156,4 +175,5 @@ def scheduler_summary(stats) -> dict:
 
 __all__ = ["SCHEMA_VERSION", "SCHEMA", "scheduler_summary",
            "stages_section", "store_section", "shards_section",
-           "rpc_section", "trace_section", "precompute_section"]
+           "rpc_section", "trace_section", "precompute_section",
+           "telemetry_section"]

@@ -212,6 +212,10 @@ class PipelineScheduler:
                       TraceContext and every stage/device step runs
                       under a span. None (default) = tracing off —
                       each hot-path site pays one ``is None`` test.
+    telemetry       -> optional ``obs.Telemetry`` hub; every completed
+                      batch feeds its end-to-end latency + per-stage
+                      wall split into the windowed metrics (same
+                      zero-cost-when-off contract as tracer).
 
     Lifecycle: lazily started on first submit/run; ``close()`` drains and
     tears down threads (stage objects themselves are owned — and closed —
@@ -223,7 +227,7 @@ class PipelineScheduler:
                  device_fn: Callable, depth: int = 3,
                  max_inflight: Optional[int] = None,
                  on_batch: Optional[Callable] = None,
-                 tracer=None):
+                 tracer=None, telemetry=None):
         if callable(host):
             self.host_fn, self.stages = host, None
         else:
@@ -232,6 +236,7 @@ class PipelineScheduler:
                 raise ValueError("empty stage sequence")
         self.device_fn = device_fn
         self.tracer = tracer
+        self.telemetry = telemetry
         self.depth = max(1, depth)
         self.max_inflight = max_inflight or 2 * self.depth
         self.on_batch = on_batch
@@ -469,6 +474,10 @@ class PipelineScheduler:
                 ticket.trace, error=ticket.error is not None,
                 t_host=round(ticket.t_host, 6),
                 t_device=round(ticket.t_device, 6))
+        if self.telemetry is not None:
+            self.telemetry.observe_batch(
+                time.perf_counter() - ticket.t_submit,
+                ticket.stage_times, error=ticket.error is not None)
         ticket._event.set()          # resolve BEFORE on_done: callbacks may
         if ticket.on_done is not None:           # call ticket.result()
             try:
@@ -572,6 +581,8 @@ class PipelineScheduler:
                     self.stats.record(th, td)
                     self.stats.merge_stage_times(st_times)
                     self.stats.t_wall += th + td
+                if self.telemetry is not None:
+                    self.telemetry.observe_batch(th + td, st_times)
                 if self.on_batch is not None:
                     try:             # completion hook fires on the serial
                         self.on_batch(None)      # path too (no ticket)

@@ -23,6 +23,7 @@ or SIGTERM.
 """
 from __future__ import annotations
 
+import itertools
 import os
 import threading
 import time
@@ -60,6 +61,9 @@ class _StagePair:
         self.select.close()
 
 
+_INSTANCE_SEQ = itertools.count()
+
+
 class GraphHostService:
     """RPC service owning one graph partition + its host-side caches.
 
@@ -67,13 +71,21 @@ class GraphHostService:
       select_build  targets -> node lists + SubgraphRows + cache counters
       invalidate    vertex ids -> dropped cache entries (both caches)
       report        cache stats + request counters
+      metrics       this host's metrics registry in wire form (the
+                    cluster-scrape building block: the device host
+                    merges every host's wire losslessly)
       ping          liveness
+
+    ``telemetry=TelemetryConfig(...)`` gives the host its own windowed
+    metrics registry (select/build wall histograms + cache counters as
+    collect-time callbacks); None (default) keeps the host metrics-free
+    and the ``metrics`` method answers with an empty registry.
     """
 
     def __init__(self, graph, *, num_threads: int = 8,
                  nbr_cache_mode: str = "lru", nbr_capacity: int = 4096,
                  cache_rows: bool = True, row_capacity: int = 1024,
-                 delay_s: float = 0.0):
+                 delay_s: float = 0.0, telemetry=None):
         self.graph = graph
         self.num_threads = num_threads
         # simulated one-way link latency (benchmarking only): lets a
@@ -95,7 +107,54 @@ class GraphHostService:
         self.stage_times: Dict[str, float] = {"select": 0.0, "build": 0.0}
         self.spans_emitted = 0
         self._span_ids = SpanAllocator()
-        self._span_host = f"graph-host:{os.getpid()}"
+        # unique per process AND per in-process instance (an inproc
+        # cluster scrape must keep same-pid hosts distinguishable)
+        seq = next(_INSTANCE_SEQ)
+        self._span_host = f"graph-host:{os.getpid()}" + \
+            (f".{seq}" if seq else "")
+        # per-host telemetry registry (opt-in; the hot path pays one
+        # ``is None`` test plus two histogram records per select_build)
+        if telemetry is not None:
+            from repro.obs.metrics import MetricsRegistry
+            reg = MetricsRegistry(self._span_host,
+                                  window_s=telemetry.window_s,
+                                  windows=telemetry.windows)
+            self._h_select = reg.whist(
+                "repro_host_select_seconds",
+                help="graph-host Select stage wall time")
+            self._h_build = reg.whist(
+                "repro_host_build_seconds",
+                help="graph-host Build stage wall time")
+            reg.counter_fn("repro_host_requests_total",
+                           lambda: self.requests,
+                           help="select_build calls answered")
+            reg.counter_fn("repro_host_targets_total",
+                           lambda: self.targets_served,
+                           help="targets served")
+            if self.nbr_cache is not None:
+                nc = self.nbr_cache
+                reg.counter_fn("repro_nbr_cache_hits_total",
+                               lambda: nc.hits,
+                               help="neighborhood cache hits")
+                reg.counter_fn("repro_nbr_cache_misses_total",
+                               lambda: nc.misses,
+                               help="neighborhood cache misses")
+                reg.counter_fn("repro_nbr_cache_evictions_total",
+                               lambda: nc.evictions,
+                               help="neighborhood cache evictions")
+            if self.sg_cache is not None:
+                rc = self.sg_cache
+                reg.counter_fn("repro_row_cache_hits_total",
+                               lambda: rc.hits,
+                               help="subgraph-row cache hits")
+                reg.counter_fn("repro_row_cache_misses_total",
+                               lambda: rc.misses,
+                               help="subgraph-row cache misses")
+            self.registry = reg
+        else:
+            self.registry = None
+            self._h_select = None
+            self._h_build = None
 
     def _pair(self, n: int, alpha: float, eps: float,
               e_pad: int) -> _StagePair:
@@ -123,6 +182,9 @@ class GraphHostService:
             self.targets_served += len(plan.targets)
             self.stage_times["select"] += t1 - t0
             self.stage_times["build"] += t2 - t1
+        if self._h_select is not None:
+            self._h_select.record(t1 - t0)
+            self._h_build.record(t2 - t1)
         result = {"node_lists": wire.node_lists_to_wire(plan.node_lists),
                   "rows": wire.rows_to_wire(plan.rows),
                   "nbr_hits": plan.nbr_hits,
@@ -185,6 +247,15 @@ class GraphHostService:
             r["subgraph_cache"] = self.sg_cache.stats()
         return r
 
+    def metrics(self, payload: Optional[dict] = None) -> dict:
+        """This host's metrics registry in wire form (JSON scalars only,
+        so it crosses the wire codec unchanged). Telemetry-free hosts
+        answer with an empty registry rather than erroring — a mixed
+        deployment's cluster scrape just sees fewer series."""
+        if self.registry is None:
+            return {"host": self._span_host, "families": {}}
+        return self.registry.collect()
+
     def ping(self, payload: Optional[dict] = None) -> dict:
         # "clock" is this process's monotonic wall clock (obs.trace.now):
         # the client's ping loop turns (send time, rtt, clock) into a
@@ -193,7 +264,8 @@ class GraphHostService:
                 "clock": now()}
 
     # -- dispatch ------------------------------------------------------------
-    _METHODS = ("select_build", "invalidate", "report", "ping")
+    _METHODS = ("select_build", "invalidate", "report", "metrics",
+                "ping")
 
     def handle(self, request: dict) -> dict:
         method = request.get("method")
@@ -245,14 +317,33 @@ def main(argv=None) -> int:
     ap.add_argument("--row-capacity", type=int, default=1024)
     ap.add_argument("--delay-ms", type=float, default=0.0,
                     help="simulated link latency per call (benchmarks)")
+    ap.add_argument("--metrics-port", type=int, default=None,
+                    help="serve Prometheus exposition on this port "
+                         "(0 = ephemeral, printed; default = off); "
+                         "also enables the host's telemetry registry")
+    ap.add_argument("--metrics-window-s", type=float, default=60.0,
+                    help="telemetry sliding-window length")
     args = ap.parse_args(argv)
 
+    telemetry = None
+    if args.metrics_port is not None:
+        from repro.obs.metrics import TelemetryConfig
+        telemetry = TelemetryConfig(port=args.metrics_port,
+                                    window_s=args.metrics_window_s)
     graph = get_graph(args.dataset, scale=args.scale, seed=args.seed)
     service = GraphHostService(
         graph, num_threads=args.num_threads,
         nbr_cache_mode=args.nbr_cache, nbr_capacity=args.nbr_capacity,
         cache_rows=not args.no_row_cache, row_capacity=args.row_capacity,
-        delay_s=args.delay_ms / 1e3)
+        delay_s=args.delay_ms / 1e3, telemetry=telemetry)
+    metrics_server = None
+    if telemetry is not None:
+        from repro.obs.promexp import MetricsHTTPServer, render_wire
+        metrics_server = MetricsHTTPServer(
+            lambda: render_wire(service.metrics()),
+            host=args.host, port=telemetry.port)
+        print(f"GRAPH_HOST_METRICS {metrics_server.host} "
+              f"{metrics_server.port}", flush=True)
     server = GraphHostServer(service, host=args.host, port=args.port)
     print(f"GRAPH_HOST_LISTENING {server.host} {server.port}",
           flush=True)
@@ -260,6 +351,9 @@ def main(argv=None) -> int:
         server.wait()
     except KeyboardInterrupt:
         server.close()
+    finally:
+        if metrics_server is not None:
+            metrics_server.close()
     return 0
 
 

@@ -333,7 +333,8 @@ class HostPool:
 
     def __init__(self, transports: Sequence[Transport], *,
                  timeout: Optional[float] = 30.0, retries: int = 2,
-                 routing: str = "round_robin", cooldown_s: float = 5.0):
+                 routing: str = "round_robin", cooldown_s: float = 5.0,
+                 on_quarantine=None):
         if not transports:
             raise ValueError("HostPool needs at least one transport")
         if routing not in ("round_robin", "affine"):
@@ -344,6 +345,10 @@ class HostPool:
         self.retries = int(retries)
         self.routing = routing
         self.cooldown_s = cooldown_s
+        # fired once per quarantine EPISODE with the endpoint string
+        # (telemetry hook: the engine routes it into the event ring);
+        # re-marks while already down stay silent
+        self.on_quarantine = on_quarantine
         self._rr = itertools.count()
         self._lock = threading.Lock()
         self._down_until = [0.0] * len(self.transports)
@@ -356,8 +361,15 @@ class HostPool:
         return [t.endpoint for t in self.transports]
 
     def _mark_down(self, i: int):
+        now = time.monotonic()
         with self._lock:
-            self._down_until[i] = time.monotonic() + self.cooldown_s
+            fresh = self._down_until[i] <= now
+            self._down_until[i] = now + self.cooldown_s
+        if fresh and self.on_quarantine is not None:
+            try:
+                self.on_quarantine(self.transports[i].endpoint)
+            except Exception:    # a telemetry hook must never break
+                pass             # routing
 
     def _mark_up(self, i: int):
         with self._lock:
@@ -563,7 +575,8 @@ def build_host_pool(config, graph=None) -> HostPool:
             nbr_cache_mode=pol.nbr_cache if pol.nbr_cache != "none"
             else "lru",
             nbr_capacity=pol.nbr_capacity,
-            cache_rows=True)
+            cache_rows=True,
+            telemetry=getattr(config, "telemetry", None))
         transports: List[Transport] = [
             InProcTransport(svc, owns_service=True)]
     elif config.transport == "socket":

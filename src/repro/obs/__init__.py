@@ -1,16 +1,29 @@
 """Observability: per-batch distributed tracing, streaming histograms,
-flight-recorder forensics, and Perfetto-loadable trace export.
+flight-recorder forensics, Perfetto-loadable trace export, and the live
+telemetry plane (windowed metrics, Prometheus exposition, SLO burn
+rates, regression watchdog).
 
-Enable with ``ServingConfig(trace=TraceConfig())``; off by default and
-zero-cost when off (every instrumentation site is one ``is None`` test,
-and traced runs are bitwise-identical to untraced ones). See
+Tracing answers "what happened to that batch"; telemetry answers "what
+has been happening lately". Enable with
+``ServingConfig(trace=TraceConfig())`` and/or
+``ServingConfig(telemetry=TelemetryConfig())``; both are off by default
+and zero-cost when off (every instrumentation site is one ``is None``
+test, and instrumented runs are bitwise-identical to bare ones). See
 docs/OBSERVABILITY.md.
 """
 from repro.obs.calib import CalibrationTable, run_instrumented
+from repro.obs.events import EventRing
 from repro.obs.export import (containment, to_chrome_trace,
                               validate_chrome_trace, write_chrome_trace)
 from repro.obs.flight import FlightRecorder
-from repro.obs.hist import LogHistogram, Reservoir, hist_dict_quantile
+from repro.obs.hist import (LogHistogram, Reservoir, hist_dict_quantile,
+                            merge_hist_dicts)
+from repro.obs.metrics import (MetricsRegistry, Telemetry,
+                               TelemetryConfig, WindowedHistogram,
+                               inject_labels, merge_wire, series_count)
+from repro.obs.promexp import (MetricsHTTPServer, render_wire,
+                               validate_exposition)
+from repro.obs.slo import SLObjective, SLOTracker, Watchdog
 from repro.obs.trace import (SpanAllocator, TraceConfig, TraceContext,
                              Tracer, now, span_dict)
 
@@ -18,8 +31,14 @@ __all__ = [
     "TraceConfig", "TraceContext", "Tracer", "SpanAllocator",
     "span_dict", "now",
     "LogHistogram", "Reservoir", "hist_dict_quantile",
+    "merge_hist_dicts",
     "FlightRecorder",
     "CalibrationTable", "run_instrumented",
     "to_chrome_trace", "write_chrome_trace", "validate_chrome_trace",
     "containment",
+    "TelemetryConfig", "MetricsRegistry", "Telemetry",
+    "WindowedHistogram", "merge_wire", "inject_labels", "series_count",
+    "render_wire", "validate_exposition", "MetricsHTTPServer",
+    "SLObjective", "SLOTracker", "Watchdog",
+    "EventRing",
 ]

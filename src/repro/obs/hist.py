@@ -95,6 +95,20 @@ class LogHistogram:
         return {"p50": self.quantile(0.50), "p90": self.quantile(0.90),
                 "p99": self.quantile(0.99)}
 
+    def fraction_above(self, threshold: float) -> float:
+        """Fraction of recorded samples strictly above ``threshold``,
+        read off the bucket counts (a sample in the threshold's own
+        bucket counts by its geometric midpoint, so the answer is exact
+        up to one ~2.2% bucket). This is the SLO tracker's "bad event"
+        fraction for latency objectives."""
+        if self.count == 0:
+            return 0.0
+        t = float(threshold)
+        above = sum(int(self.counts[i])
+                    for i in np.nonzero(self.counts)[0]
+                    if self._bucket_value(int(i)) > t)
+        return above / self.count
+
     def merge(self, other: "LogHistogram") -> "LogHistogram":
         if other.value_floor != self.value_floor or \
                 len(other.counts) != len(self.counts):
@@ -149,6 +163,45 @@ class Reservoir:
         return self._buf.maxlen
 
 
+def merge_hist_dicts(a: Optional[dict], b: Optional[dict]) -> dict:
+    """Losslessly merge two ``LogHistogram.to_dict()`` payloads (bucket
+    counts add, count/min/max/mean combine exactly, quantiles recompute
+    from the merged counts). This is how per-host histograms from a
+    cluster metrics scrape fold into one view: merged count equals the
+    sum of the per-host counts by construction. Bucket schemes must
+    match (same floor + growth); JSON round-trips may have stringified
+    the bucket keys, both spellings are accepted."""
+    if not a:
+        return dict(b or {})
+    if not b:
+        return dict(a)
+    if a.get("value_floor") != b.get("value_floor") or \
+            a.get("buckets_per_doubling") != b.get("buckets_per_doubling"):
+        raise ValueError("cannot merge histograms with different "
+                         "bucket schemes")
+    counts: Dict[int, int] = {}
+    for d in (a, b):
+        for k, v in (d.get("counts") or {}).items():
+            counts[int(k)] = counts.get(int(k), 0) + int(v)
+    ca, cb = int(a.get("count", 0)), int(b.get("count", 0))
+    n = ca + cb
+    mean = (a.get("mean", 0.0) * ca + b.get("mean", 0.0) * cb) / n \
+        if n else 0.0
+    out = {"scheme": "log2",
+           "buckets_per_doubling": a.get("buckets_per_doubling",
+                                         _BUCKETS_PER_DOUBLING),
+           "value_floor": a["value_floor"], "count": n,
+           "mean": round(mean, 9),
+           "min": min(a.get("min", math.inf), b.get("min", math.inf))
+           if n else 0.0,
+           "max": max(a.get("max", 0.0), b.get("max", 0.0)),
+           "counts": {k: counts[k] for k in sorted(counts)}}
+    for name, q in (("p50", 0.50), ("p90", 0.90), ("p99", 0.99)):
+        v = hist_dict_quantile(out, q)
+        out[name] = round(v, 9) if v is not None else 0.0
+    return out
+
+
 def hist_dict_quantile(d: dict, q: float) -> Optional[float]:
     """Read a quantile back out of a ``LogHistogram.to_dict()`` payload
     (export-side tooling works on serialized histograms)."""
@@ -168,4 +221,5 @@ def hist_dict_quantile(d: dict, q: float) -> Optional[float]:
     return None
 
 
-__all__ = ["LogHistogram", "Reservoir", "hist_dict_quantile"]
+__all__ = ["LogHistogram", "Reservoir", "hist_dict_quantile",
+           "merge_hist_dicts"]

@@ -21,6 +21,7 @@ from __future__ import annotations
 
 import itertools
 import threading
+import time
 from concurrent.futures import ThreadPoolExecutor
 from contextlib import nullcontext
 from types import SimpleNamespace
@@ -139,9 +140,11 @@ class PrecomputeManager:
             ids = np.asarray(take, np.int64)
             epochs = self.tier.epoch_of(ids)
             tr = self.engine.tracer
+            tm = getattr(self.engine, "telemetry", None)
             cm = tr.root_span("refresh.chunk", cat="precompute",
                               n_vertices=len(ids)) \
                 if tr is not None else nullcontext()
+            t0 = time.perf_counter()
             try:
                 with cm:
                     rows = layer_major_embeddings(
@@ -150,6 +153,10 @@ class PrecomputeManager:
                 self.tier.promote(ids, rows, epochs)
                 with self._lock:
                     self.refresh_chunks += 1
+                if tm is not None:
+                    tm.whist("repro_refresh_chunk_seconds",
+                             help="tier refresh chunk wall time"
+                             ).record(time.perf_counter() - t0)
             except Exception:       # a failed chunk must not kill the
                 with self._lock:    # worker; its vertices stay demoted
                     self.refresh_errors += 1    # (served online) until

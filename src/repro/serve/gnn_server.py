@@ -31,7 +31,7 @@ from repro.core.engine import DecoupledEngine
 from repro.core.report_schema import (SCHEMA_VERSION, precompute_section,
                                       rpc_section, shards_section,
                                       stages_section, store_section,
-                                      trace_section)
+                                      telemetry_section, trace_section)
 from repro.obs.hist import LogHistogram, Reservoir
 
 DEFAULT_MODEL = "default"
@@ -110,6 +110,12 @@ class _ModelLane:
         self.stats = ServerStats()
         self._stop = threading.Event()
         self._thread: Optional[threading.Thread] = None
+        # metered lane: end-to-end request latency (enqueue -> done)
+        # into the engine's windowed registry
+        self._h_request = engine.telemetry.whist(
+            "repro_request_seconds",
+            help="end-to-end request latency") \
+            if engine.telemetry is not None else None
 
     # -- micro-batching ------------------------------------------------------
     def _collect_batch(self) -> List[Request]:
@@ -164,6 +170,8 @@ class _ModelLane:
             r.embedding = emb[i]
             r.t_done = t1
             self.stats.record(r.latency)
+            if self._h_request is not None:
+                self._h_request.record(r.latency)
         self.stats.record_batch(t1 - t0)
 
     # -- lifecycle -----------------------------------------------------------
@@ -217,6 +225,9 @@ class _ModelLane:
             r["trace"] = trace
         if self.engine.precompute is not None:
             r["precompute"] = precompute_section(self.engine.precompute)
+        telemetry = telemetry_section(self.engine.telemetry)
+        if telemetry is not None:
+            r["telemetry"] = telemetry
         return r
 
 
@@ -247,6 +258,7 @@ class GNNServer:
         self._plan_fixed = plan is not None
         self._lanes: Dict[str, _ModelLane] = {}
         self._started = False
+        self._metrics_server = None
         if engine is not None:
             self.register(DEFAULT_MODEL, engine)
 
@@ -322,6 +334,32 @@ class GNNServer:
                 raise TimeoutError("serve drain timed out")
             time.sleep(0.002)
 
+    # -- metrics exposition ---------------------------------------------------
+    def metrics_wire(self) -> dict:
+        """All metered lanes' registries merged into one server view:
+        each lane's wire gets a ``model=<name>`` label first, so
+        same-name families from different models stay distinct series
+        (and a multi-host lane folds its graph hosts in losslessly via
+        ``engine.metrics_wire``)."""
+        from repro.obs.metrics import inject_labels, merge_wire
+        wires = []
+        for name, lane in self._lanes.items():
+            if lane.engine.telemetry is None:
+                continue
+            wires.append(inject_labels(lane.engine.metrics_wire(),
+                                       model=name))
+        return merge_wire(wires)
+
+    def metrics_text(self) -> str:
+        """Prometheus text exposition of every metered lane (what the
+        server's HTTP ``/metrics`` endpoint serves)."""
+        from repro.obs.promexp import render_wire
+        return render_wire(self.metrics_wire())
+
+    @property
+    def metrics_url(self) -> Optional[str]:
+        return self._metrics_server.url if self._metrics_server else None
+
     # -- lifecycle -----------------------------------------------------------
     def start(self):
         if not self._lanes:
@@ -329,10 +367,22 @@ class GNNServer:
         self._started = True
         for lane in self._lanes.values():
             lane.start()
+        # exposition endpoint: on when the server's config asks for a
+        # port (a Prometheus scraper polls GET /metrics; port 0 picks an
+        # ephemeral one, surfaced via .metrics_url)
+        tconf = self.config.telemetry
+        if tconf is not None and tconf.port is not None \
+                and self._metrics_server is None:
+            from repro.obs.promexp import MetricsHTTPServer
+            self._metrics_server = MetricsHTTPServer(
+                self.metrics_text, port=tconf.port)
 
     def stop(self):
         for lane in self._lanes.values():
             lane.stop()
+        if self._metrics_server is not None:
+            self._metrics_server.close()
+            self._metrics_server = None
         self._started = False
 
     # -- reporting -----------------------------------------------------------
