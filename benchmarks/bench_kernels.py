@@ -83,7 +83,14 @@ def run(quick: bool = True):
     print_table(rows, ["kernel", "cfg", "max_err", "t_compute_us",
                        "t_memory_us", "bound", "intensity"])
     payload = {"rows": rows}
-    record_trajectory("kernels", payload)
+    # regress gate scalars: one residual per kernel (lower is better) so
+    # a numerics regression in ANY kernel trips python -m repro.obs.regress
+    regress: dict = {}
+    for r in rows:           # worst residual per kernel (several cfgs in
+        k = f"max_err_{r['kernel']}"          # the non-quick sweep)
+        regress[k] = max(regress.get(k, 0.0), float(r["max_err"]))
+    regress["max_err_worst"] = float(np.max(list(regress.values())))
+    record_trajectory("kernels", payload, regress=regress)
     # np.max propagates NaN (python max() would drop a non-leading NaN)
     worst = float(np.max([float(r["max_err"]) for r in rows]))
     if not (worst <= 1e-2):

@@ -56,6 +56,11 @@ class BatchPlan:
     rows: Optional[List[SubgraphRows]] = None
     build_hits: int = 0
     build_misses: int = 0
+    # induced-subgraph density stats (mean over the batch's rows) — the
+    # inputs to per-batch adaptive dispatch. Build fills them locally;
+    # Pack recomputes from the rows when Build ran behind a transport.
+    n_vertices: Optional[float] = None   # mean real vertices / subgraph
+    n_edges: Optional[float] = None      # mean real edges / subgraph
     # Pack
     sb: Optional[SubgraphBatch] = None
     device: Optional[Dict[str, np.ndarray]] = None
@@ -65,6 +70,16 @@ class BatchPlan:
     tier_done: bool = False       # all-fresh: skip Select/Build/Pack
     online_index: Optional[np.ndarray] = None  # stale slot -> online row
     orig_targets: Optional[np.ndarray] = None  # pre-split target list
+
+
+def _note_density(plan: BatchPlan) -> None:
+    """Batch density stats from the built rows (mean real vertex/edge
+    counts per subgraph — the per-batch analogue of the graph-global
+    avg_edges the static FLOP mux uses)."""
+    if not plan.rows:
+        return
+    plan.n_vertices = float(np.mean([r.n_vertices for r in plan.rows]))
+    plan.n_edges = float(np.mean([r.n_edges for r in plan.rows]))
 
 
 class PlanStage:
@@ -188,6 +203,7 @@ class BuildStage(PlanStage):
         if cache is None:
             plan.rows = [build_subgraph_rows(eng.graph, nl[:n], n, e_pad)
                          for nl in plan.node_lists]
+            _note_density(plan)
             return plan
         built: Dict[int, SubgraphRows] = {}
         hits = 0
@@ -207,6 +223,7 @@ class BuildStage(PlanStage):
         plan.rows = [built[t] for t in targets]
         plan.build_hits = hits
         plan.build_misses = len(built) - hits
+        _note_density(plan)
         tr = eng.tracer
         if tr is not None:           # annotate this batch's build span
             tr.annotate(build_hits=hits,
@@ -227,6 +244,8 @@ class PackStage(PlanStage):
     def run(self, plan: BatchPlan) -> BatchPlan:
         if plan.tier_done:
             return plan
+        if plan.n_edges is None:     # Build ran behind a transport; the
+            _note_density(plan)      # rows' scalars crossed the wire
         eng = self.engine
         src = eng._fsource
         n = eng.cfg.receptive_field
@@ -253,7 +272,8 @@ class PackStage(PlanStage):
             cache_hits=plan.nbr_hits, cache_misses=plan.nbr_misses,
             build_hits=plan.build_hits, build_misses=plan.build_misses,
             dedup_ratio=dedup,
-            shard_bytes=per_shard(payload) if per_shard else None)
+            shard_bytes=per_shard(payload) if per_shard else None,
+            batch_edges=plan.n_edges)
         plan.device = d
         tr = eng.tracer
         if tr is not None:           # annotate this batch's pack span

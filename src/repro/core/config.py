@@ -72,6 +72,11 @@ class ServingConfig:
     # TelemetryConfig enables windowed metrics + Prometheus exposition
     # + SLO burn rates + the regression watchdog (obs package)
     telemetry: Optional[object] = None
+    # dispatch: None (default) = static mode selection at engine init;
+    # a DispatchConfig enables per-batch measured-cost dense/sg dispatch
+    # + the bounded variant cache + Pallas block autotune (core.dispatch).
+    # Only meaningful with mode="auto" — a forced mode pins the mux.
+    dispatch: Optional[object] = None
 
     def __post_init__(self):
         if self.trace is not None:
@@ -92,6 +97,12 @@ class ServingConfig:
                 raise TypeError(
                     f"precompute must be a precompute.PrecomputeConfig "
                     f"or None, got {type(self.precompute).__name__}")
+        if self.dispatch is not None:
+            from repro.core.dispatch import DispatchConfig
+            if not isinstance(self.dispatch, DispatchConfig):
+                raise TypeError(
+                    f"dispatch must be a core.DispatchConfig or None, "
+                    f"got {type(self.dispatch).__name__}")
         if not isinstance(self.store, StorePolicy):
             raise TypeError(
                 f"store must be a StorePolicy, got "
@@ -177,6 +188,8 @@ class ServingConfig:
             d["precompute"] = self.precompute.describe()
         if self.telemetry is not None:
             d["telemetry"] = self.telemetry.describe()
+        if self.dispatch is not None:
+            d["dispatch"] = self.dispatch.describe()
         if self.remote:
             d.update(endpoints=list(self.endpoints) or ["inproc"],
                      rpc_timeout_s=self.rpc_timeout_s,

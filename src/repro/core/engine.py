@@ -104,6 +104,11 @@ class DecoupledEngine:
         n = cfg.receptive_field
         self.e_pad = config.e_pad or default_edge_pad(graph, n)
         avg_edges = min(self.e_pad, n * float(graph.degrees.mean()))
+        # graph-global degree estimate, re-seeded by the FIRST measured
+        # batch density from the Build stage (run_device) — the measured
+        # number is what per-batch dispatch and reports key on
+        self.avg_edges_prior = avg_edges
+        self._density_seeded = False
         # compile the model through the lowering registry, then set each
         # op's mode mux from ITS kernel's FLOP model (mode="auto") or the
         # caller's force — a single program may mix sg aggregation with
@@ -117,6 +122,44 @@ class DecoupledEngine:
         # ship only the adjacency arrays the specialized program reads
         # (an all-sg aggregation path ships none — just the edge list)
         self.adj_keys = required_adjacency(self.program)
+        # per-batch adaptive dispatch (core.dispatch): only meaningful
+        # with mode="auto" — a forced mode pins the mux, so the policy
+        # never runs there (counters still label those batches "forced")
+        dconf = config.dispatch
+        self.dispatch = None
+        self._variants = None
+        self._disp_counters: Dict = {}
+        self._forced_dispatch = 0
+        self._last_blocks: Dict[str, int] = {}
+        self._static_assignment = {d.site: d.mode
+                                   for d in self.decision if d.mux}
+        if dconf is not None and mode == "auto":
+            from repro.core.dispatch import DispatchPolicy, VariantCache
+            from repro.obs.calib import CalibrationTable
+            table = self._calib if self._calib is not None \
+                else CalibrationTable()
+            if dconf.artifact is not None:
+                from repro.ckpt.checkpoint import committed_steps
+                from repro.obs.calib import load_calibration
+                if committed_steps(dconf.artifact):
+                    # a committed table dispatches MEASURED from the
+                    # first batch (warmup is skipped — its cells are
+                    # already populated); stale stamps raise here
+                    table = load_calibration(dconf.artifact, graph=graph,
+                                             cfg=cfg, impl=self.impl)
+            self._calib = table
+            self.dispatch = DispatchPolicy(
+                self.program, self.impl, table, n=n, f_in=cfg.f_in,
+                f_hidden=cfg.f_hidden,
+                warmup_passes=dconf.warmup_passes, seed=dconf.seed,
+                autotune_blocks=dconf.autotune_blocks)
+            self._variants = VariantCache(dconf.variant_capacity)
+            # adaptive payload union: ANY per-batch mode vector must
+            # find its arrays in the device batch, so ship the
+            # conservative (unspecialized) adjacency set + the edge
+            # list. Extra unused keys do not change jit outputs.
+            self.adj_keys = required_adjacency(lower(cfg))
+            self.needs_edges = True
         if params is None:
             params = init_gnn(cfg, jax.random.PRNGKey(config.seed))
         self.params = params
@@ -282,6 +325,22 @@ class DecoupledEngine:
             reg.counter_fn("repro_auto_repins_total",
                            lambda: self.auto_repins,
                            help="automatic residency rebalances")
+        if self.dispatch is not None:
+            pol, vc = self.dispatch, self._variants
+            reg.counter_fn("repro_dispatch_decisions_total",
+                           lambda: pol.decisions,
+                           help="per-batch dispatch decisions taken")
+            reg.counter_fn("repro_variant_cache_hits_total",
+                           lambda: vc.hits,
+                           help="compiled-variant cache hits")
+            reg.counter_fn("repro_variant_cache_misses_total",
+                           lambda: vc.misses,
+                           help="compiled-variant cache misses (builds)")
+            reg.counter_fn("repro_variant_cache_evictions_total",
+                           lambda: vc.evictions,
+                           help="compiled variants evicted (LRU bound)")
+            reg.gauge_fn("repro_variant_cache_size", lambda: len(vc),
+                         help="live compiled variants (<= capacity)")
         if self.precompute is not None:
             tier, mgr = self.precompute.tier, self.precompute
             reg.counter_fn("repro_tier_hits_total", lambda: tier.hits,
@@ -450,7 +509,27 @@ class DecoupledEngine:
                                          self.impl, self._calib)
                 except Exception:    # calibration must never break
                     pass             # serving
-        out = self._infer(self.params, db)
+        if plan is not None and not self._density_seeded \
+                and plan.n_edges is not None:
+            # first measured batch density replaces the degree-based
+            # construction-time estimate as the engine's prior
+            self._density_seeded = True
+            self.avg_edges_prior = min(float(plan.n_edges),
+                                       float(self.e_pad))
+        if self.dispatch is not None and plan is not None \
+                and plan.n_edges is not None:
+            out = self._dispatch_infer(plan, db)
+        else:
+            if self.config.dispatch is not None \
+                    and self.dispatch is None:
+                # forced mode with dispatch telemetry requested: the
+                # policy never runs, but the mode counters still tell
+                # the operator WHAT served and WHY ("forced")
+                self._forced_dispatch += 1
+                self._count_dispatch(self._static_assignment,
+                                     {s: "forced"
+                                      for s in self._static_assignment})
+            out = self._infer(self.params, db)
         if plan is not None and plan.online_index is not None:
             # mixed batch: the online program ran on the stale targets
             # only (padded) — rejoin with the tier rows on the original
@@ -460,6 +539,125 @@ class DecoupledEngine:
                             jnp.asarray(plan.tier_rows),
                             out[jnp.asarray(plan.online_index)])
         return out
+
+    # -- per-batch adaptive dispatch ----------------------------------------
+    def _count_dispatch(self, assignment: Dict[str, str],
+                        sources: Dict[str, str]) -> None:
+        """Per-mux-op dispatch counters:
+        ``repro_dispatch_total{op,mode,source}``. Counter handles are
+        cached per label set so the hot path pays one dict probe."""
+        if self.telemetry is None:
+            return
+        for site, m in assignment.items():
+            key = (site, m, sources[site])
+            c = self._disp_counters.get(key)
+            if c is None:
+                c = self._disp_counters[key] = self.telemetry.counter(
+                    "repro_dispatch_total",
+                    help="mux-op dispatch outcomes per batch",
+                    op=site, mode=m, source=sources[site])
+            c.inc()
+
+    def _build_variant(self, assignment, blocks):
+        """Jit one compiled variant: the engine's program re-specialized
+        to this mode vector (+ Pallas block overrides). The op stream
+        never changes — only the per-site dense/sg mux — so every
+        variant serves from the same fixed shapes."""
+        from repro.core.program import respecialize
+        prog = respecialize(self.program, dict(assignment))
+        blk = dict(blocks) or None
+
+        def fwd(params, batch):
+            emb, _ = execute(prog, params, batch, impl=self.impl,
+                             blocks=blk)
+            return emb
+
+        return jax.jit(fwd)
+
+    def _dispatch_infer(self, plan: BatchPlan, db) -> jax.Array:
+        """The adaptive device step: consult the policy with THIS
+        batch's measured density, run the warmup/autotune exploration
+        pass when scheduled (outputs discarded), then serve through the
+        bounded variant cache."""
+        from repro.core.dispatch import variant_key
+        from repro.core.program import respecialize
+        from repro.obs.calib import (run_block_autotune, run_instrumented,
+                                     size_bucket)
+        pol = self.dispatch
+        bucket = size_bucket(db)
+        avg_e = min(float(plan.n_edges), float(self.e_pad))
+        dec = pol.decide(avg_e, bucket)
+        if dec.blocks:
+            self._last_blocks = dict(dec.blocks)
+        if dec.warm_mode is not None:
+            # instrumented exploration pass in the scheduled forced mode
+            # — its outputs are DISCARDED (serving stays on
+            # dec.assignment below), so warmup batches remain bitwise-
+            # identical to an engine with dispatch off
+            try:
+                warm = {s: dec.warm_mode for s in pol.sites}
+                run_instrumented(respecialize(self.program, warm),
+                                 self.params, db, self.impl, pol.table)
+                if pol.autotune_blocks and self.impl == "pallas":
+                    run_block_autotune(self.program, self.params, db,
+                                       pol.table)
+            except Exception:        # exploration must never break
+                pass                 # serving
+        self._count_dispatch(dec.assignment, dec.site_sources)
+        tr = self.tracer
+        if tr is not None and tr.current() is not None:
+            tr.annotate(dispatch_source=dec.source,
+                        dispatch_bucket=dec.bucket,
+                        dispatch_modes=",".join(
+                            f"{s}={m}" for s, m
+                            in sorted(dec.assignment.items())),
+                        batch_avg_edges=round(dec.avg_edges, 1))
+        fn = self._variants.get(
+            variant_key(dec.assignment, dec.blocks),
+            lambda: self._build_variant(dec.assignment, dec.blocks))
+        return fn(self.params, db)
+
+    def dispatch_report(self) -> Optional[dict]:
+        """Adaptive-dispatch state (the ``dispatch.*`` schema section):
+        decision/source counters, warmup schedule, variant-cache bounds
+        and hit/evict counters, resolved block overrides. None when the
+        deployment was built without ``ServingConfig(dispatch=...)`` —
+        the section is omitted, like ``trace``."""
+        dconf = self.config.dispatch
+        if dconf is None:
+            return None
+        if self.dispatch is None:    # forced mode: policy inert
+            return {"enabled": True, "policy": "forced",
+                    "impl": self.impl,
+                    "mux_sites": sorted(self._static_assignment),
+                    "decisions": self._forced_dispatch,
+                    "sources": {"forced": self._forced_dispatch},
+                    "artifact": dconf.artifact}
+        d = self.dispatch.report()
+        d.update(enabled=True, variants=self._variants.stats(),
+                 blocks=dict(self._last_blocks),
+                 artifact=dconf.artifact)
+        return d
+
+    def save_calibration(self, path: Optional[str] = None) -> str:
+        """Persist the live calibration table (per-op p50 cells + block
+        autotune cells) as a committed artifact at ``path`` (default:
+        ``DispatchConfig.artifact``); a later engine with the same
+        graph/model/impl loads it and dispatches measured from the
+        first batch."""
+        from repro.obs.calib import save_calibration
+        dconf = self.config.dispatch
+        path = path or (dconf.artifact if dconf is not None else None)
+        if path is None:
+            raise ValueError(
+                "no artifact path: pass save_calibration(path=...) or "
+                "set DispatchConfig(artifact=...)")
+        if self._calib is None:
+            raise ValueError(
+                "no calibration table on this engine; enable "
+                "ServingConfig(dispatch=...) or trace calibration")
+        return save_calibration(path, self._calib, graph=self.graph,
+                                cfg=self.cfg, impl=self.impl)
 
     # -- end-to-end ----------------------------------------------------------
     def pad_targets(self, targets: np.ndarray) -> np.ndarray:
@@ -677,6 +875,15 @@ class DecoupledEngine:
         return precompute_section(self.precompute)
 
     def close(self):
+        dconf = self.config.dispatch
+        if self.dispatch is not None and dconf.save_on_close \
+                and dconf.artifact:
+            try:                     # best-effort: a failed save must
+                self.save_calibration()   # not block shutdown
+            except Exception as e:
+                import warnings
+                warnings.warn(f"calibration save failed: {e}",
+                              RuntimeWarning, stacklevel=2)
         if hasattr(self.graph, "unregister_listener"):
             self.graph.unregister_listener(self.invalidate)
         if self.precompute is not None:

@@ -453,6 +453,52 @@ class ProgramDecision:
 
 ForceSpec = Union[None, str, Dict[str, str]]
 
+# Pallas kernel block-size overrides threaded through the executor:
+# {"block_f": int|None, "block_e": int|None}. None / missing keys keep
+# the kernels' defaults, so blocks=None is exactly the pre-autotune path.
+BlockSpec = Optional[Dict[str, Optional[int]]]
+
+
+def mux_sites(prog: AckProgram) -> Tuple[str, ...]:
+    """Site labels of every EXECUTED op with a dense/sg mux — the keys a
+    per-batch mode assignment must cover (tier/tail ops never mux)."""
+    return tuple(site for site, op in prog.ops if op.mux)
+
+
+def respecialize(prog: AckProgram, modes: Dict[str, str]) -> AckProgram:
+    """Cheap per-batch re-specialization: return ``prog`` with the mux
+    mode of each listed site replaced (``{"layer0[0]": "sg", ...}``).
+    Sites not listed keep their existing mode, so re-specializing an
+    already-specialized program always yields a fully specialized one —
+    this is the variant builder behind measured-cost dispatch, where the
+    mode vector changes per batch but the op stream never does."""
+    unknown = set(modes) - {f"{sec}[{i}]"
+                            for sec, seq in (("layer0", prog.layer0),
+                                             ("inner", prog.inner),
+                                             ("tail", prog.tail))
+                            for i in range(len(seq))}
+    if unknown:
+        raise KeyError(f"unknown program sites {sorted(unknown)}")
+    new_secs = {}
+    for sec, seq in (("layer0", prog.layer0), ("inner", prog.inner),
+                     ("tail", prog.tail)):
+        ops = []
+        for i, op in enumerate(seq):
+            m = modes.get(f"{sec}[{i}]")
+            if m is not None:
+                if not op.mux:
+                    raise ValueError(
+                        f"{sec}[{i}] ({op.describe()}) has no dense/sg "
+                        f"mux — only Aggregate/AttentionSoftmax modes "
+                        f"can be re-specialized")
+                if m not in ("dense", "sg"):
+                    raise ValueError(f"mode {m!r} for {sec}[{i}]")
+                op = replace(op, mode=m)
+            ops.append(op)
+        new_secs[sec] = tuple(ops)
+    return replace(prog, layer0=new_secs["layer0"],
+                   inner=new_secs["inner"], tail=new_secs["tail"])
+
 
 def _forced(force: ForceSpec, site: str, opname: str) -> Optional[str]:
     if force is None:
@@ -572,8 +618,16 @@ def _sg_weights(norm: str, batch):
     return jnp.ones_like(batch["edge_w"]) * (batch["edge_w"] != 0)
 
 
-def _step_aggregate(op: Aggregate, impl: str):
+def _block_kw(blocks: BlockSpec, key: str) -> dict:
+    """Static kernel kwargs for a tuned block size (empty = defaults)."""
+    if blocks and blocks.get(key):
+        return {key: int(blocks[key])}
+    return {}
+
+
+def _step_aggregate(op: Aggregate, impl: str, blocks: BlockSpec = None):
     from repro.kernels import ops as kops
+    bkw = _block_kw(blocks, "block_e")
 
     def step(p, regs, batch):
         h = regs[op.src]
@@ -583,7 +637,8 @@ def _step_aggregate(op: Aggregate, impl: str):
         w = _sg_weights(op.norm, batch)
         if impl == "pallas":
             z = kops.scatter_gather_aggregate(batch["edge_src"],
-                                              batch["edge_dst"], w, h)
+                                              batch["edge_dst"], w, h,
+                                              **bkw)
         else:
             z = agg_sg(batch["edge_src"], batch["edge_dst"], w, h,
                        h.shape[1])
@@ -603,8 +658,9 @@ def _step_residual(op: Residual):
     return step
 
 
-def _step_transform(op: Transform, impl: str):
+def _step_transform(op: Transform, impl: str, blocks: BlockSpec = None):
     from repro.kernels import ops as kops
+    bkw = _block_kw(blocks, "block_f")
 
     if impl == "pallas" and op.w_self is None:
         # pure single-input transform through the fused kernel's W_self
@@ -617,7 +673,8 @@ def _step_transform(op: Transform, impl: str):
             h = regs[op.src]
             regs[op.out] = kops.fused_gnn_layer(
                 _dummy_adj(batch, h), h, None, p[op.w],
-                p[op.b] if op.b else None, batch["mask"], act=op.act)
+                p[op.b] if op.b else None, batch["mask"], act=op.act,
+                **bkw)
         return step
 
     def step(p, regs, batch):
@@ -635,11 +692,13 @@ def _step_transform(op: Transform, impl: str):
     return step
 
 
-def _fused_step(agg: Aggregate, res: Optional[Residual], tf: Transform):
+def _fused_step(agg: Aggregate, res: Optional[Residual], tf: Transform,
+                blocks: BlockSpec = None):
     """Pallas peephole: dense Aggregate [+ Residual] + Transform as ONE
     fused MXU kernel call — the aggregated intermediate never leaves VMEM
     (A @ (H @ W) association, see kernels/fused_gnn.py)."""
     from repro.kernels import ops as kops
+    bkw = _block_kw(blocks, "block_f")
 
     def step(p, regs, batch):
         h = regs[agg.src]
@@ -650,7 +709,7 @@ def _fused_step(agg: Aggregate, res: Optional[Residual], tf: Transform):
             a = a + scale * jnp.eye(n, dtype=h.dtype)
         regs[tf.out] = kops.fused_gnn_layer(
             a, h, p[tf.w], p[tf.w_self] if tf.w_self else None,
-            p[tf.b] if tf.b else None, batch["mask"], act=tf.act)
+            p[tf.b] if tf.b else None, batch["mask"], act=tf.act, **bkw)
     return step
 
 
@@ -734,14 +793,17 @@ def _step_attention_softmax(op: AttentionSoftmax, impl: str):
     return step
 
 
-def compile_steps(seq: Sequence[AckOp], impl: str):
+def compile_steps(seq: Sequence[AckOp], impl: str,
+                  blocks: BlockSpec = None):
     """Lower an op stream to labeled step closures: a list of
     ``(ops, step)`` pairs where ``ops`` is the tuple of AckOps the step
     executes (a singleton, or the Aggregate[+Residual]+Transform group a
     Pallas peephole fused into one kernel call). ``_compile_section``
     strips the labels for the jitted execution path; ``obs.calib`` keeps
     them to time each step of a sampled eager pass — the per-op measured
-    latencies the ROADMAP's measured-cost dispatch needs."""
+    latencies the ROADMAP's measured-cost dispatch needs. ``blocks``
+    threads autotuned Pallas block sizes into the kernel calls
+    (``{"block_f": ..., "block_e": ...}``; None = kernel defaults)."""
     steps = []
     i = 0
     while i < len(seq):
@@ -767,15 +829,16 @@ def compile_steps(seq: Sequence[AckOp], impl: str):
                     and seq[j].src == op.out):
                 group = tuple(o for o in (op, res, seq[j])
                               if o is not None)
-                steps.append((group, _fused_step(op, res, seq[j])))
+                steps.append((group, _fused_step(op, res, seq[j],
+                                                 blocks)))
                 i = j + 1
                 continue
         if isinstance(op, Aggregate):
-            steps.append(((op,), _step_aggregate(op, impl)))
+            steps.append(((op,), _step_aggregate(op, impl, blocks)))
         elif isinstance(op, Residual):
             steps.append(((op,), _step_residual(op)))
         elif isinstance(op, Transform):
-            steps.append(((op,), _step_transform(op, impl)))
+            steps.append(((op,), _step_transform(op, impl, blocks)))
         elif isinstance(op, AttentionScore):
             steps.append(((op,), _step_attention_score(op)))
         elif isinstance(op, AttentionSoftmax):
@@ -786,9 +849,10 @@ def compile_steps(seq: Sequence[AckOp], impl: str):
     return steps
 
 
-def _compile_section(seq: Sequence[AckOp], impl: str):
+def _compile_section(seq: Sequence[AckOp], impl: str,
+                     blocks: BlockSpec = None):
     """Unlabeled section lowering for the jitted execution path."""
-    steps = [step for _, step in compile_steps(seq, impl)]
+    steps = [step for _, step in compile_steps(seq, impl, blocks)]
 
     def apply(p, h, batch, h0=None):
         # "h0" is the propagation ENTRY state: the layer input for
@@ -801,18 +865,20 @@ def _compile_section(seq: Sequence[AckOp], impl: str):
     return apply
 
 
-def execute(prog: AckProgram, params, batch, impl: str = "xla"):
+def execute(prog: AckProgram, params, batch, impl: str = "xla",
+            blocks: BlockSpec = None):
     """Run a specialized AckProgram: layer0, then L-1 inner layers under
     one ``lax.scan`` over the stacked weights, then the tail. Returns
     ``(embeddings [C, f], final h [C, N, f])`` — the same contract as the
-    pre-IR ``gnn_forward``."""
+    pre-IR ``gnn_forward``. ``blocks`` carries autotuned Pallas block
+    sizes (see ``compile_steps``); None keeps the kernel defaults."""
     if not prog.specialized:
         raise ValueError(
             "program has unspecialized mux ops — call specialize() first")
-    apply0 = _compile_section(prog.layer0, impl)
+    apply0 = _compile_section(prog.layer0, impl, blocks)
     h = apply0(params["layer0"], batch["feats"], batch)
     if prog.n_layers > 1:
-        apply_i = _compile_section(prog.inner, impl)
+        apply_i = _compile_section(prog.inner, impl, blocks)
         h0 = h                      # scan-entry prediction, teleport anchor
 
         def body(hh, lp):

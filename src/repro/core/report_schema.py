@@ -34,6 +34,11 @@ can detect drift:
               windowed metrics snapshot (counters / gauges / histogram
               quantiles over the sliding window), SLO burn-rate rows,
               watchdog state, and the structured event ring summary
+  dispatch.*  per-batch adaptive dispatch (ServingConfig(dispatch=...)):
+              policy identity + decision/source counters + warmup
+              schedule state, the compiled-variant cache's bounded
+              size / hit / eviction counters, the resolved Pallas
+              block overrides, and the calibration table's cell count
 
 Section builders take a ``SchedulerStats``-shaped object (duck-typed to
 avoid an import cycle with core.scheduler) and return plain dicts;
@@ -55,18 +60,24 @@ Version history:
      only on deployments with ServingConfig(telemetry=...)) carrying
      the windowed metrics snapshot, SLO burn rates, watchdog summary,
      and event ring. Existing keys unchanged — additive again.
+  5  per-batch adaptive dispatch: new optional ``dispatch`` section
+     (emitted only on deployments with ServingConfig(dispatch=...)),
+     and ``stages.batch_edges`` — the mean measured induced-subgraph
+     edge count the Build stage reported (0.0 on pre-dispatch
+     deployments and tier-only batches). Additive, like v2-v4.
 """
 from __future__ import annotations
 
 from typing import Optional
 
-SCHEMA_VERSION = 4
+SCHEMA_VERSION = 5
 
 # documented key map (stable contract; bump SCHEMA_VERSION on change)
 SCHEMA = {
     "latency": ("t_wall", "t_host", "t_device", "t_init",
                 "p50", "p90", "p99", "mean", "batch_mean", "n", "hist"),
-    "stages": ("times", "overlap", "batches", "build_hit_rate"),
+    "stages": ("times", "overlap", "batches", "build_hit_rate",
+               "batch_edges"),
     "store": ("bytes_shipped", "bytes_dense", "transfer_ratio",
               "cache_hit_rate", "dedup_ratio", "policy", "features",
               "nbr_cache", "subgraph_cache", "auto_repins",
@@ -86,6 +97,9 @@ SCHEMA = {
     "telemetry": ("enabled", "host", "window_s", "windows", "series",
                   "counters", "gauges", "hists", "slo", "watchdog",
                   "evaluations", "events"),
+    "dispatch": ("enabled", "policy", "impl", "mux_sites", "decisions",
+                 "sources", "warmup", "variants", "blocks",
+                 "table_cells", "table_passes", "artifact"),
 }
 
 
@@ -94,7 +108,8 @@ def stages_section(stats) -> dict:
                       for k, v in stats.stage_times.items()},
             "overlap": round(stats.overlap_fraction, 3),
             "batches": stats.n_batches,
-            "build_hit_rate": round(stats.build_hit_rate, 4)}
+            "build_hit_rate": round(stats.build_hit_rate, 4),
+            "batch_edges": round(stats.batch_edges, 2)}
 
 
 def store_section(stats) -> dict:
@@ -155,6 +170,16 @@ def telemetry_section(telemetry) -> Optional[dict]:
     return telemetry.report()
 
 
+def dispatch_section(engine) -> Optional[dict]:
+    """The ``dispatch.*`` section of an adaptively-dispatched deployment
+    (None when ServingConfig(dispatch=...) is unset — omitted, like
+    ``trace``). Duck-typed on the engine's ``dispatch_report``."""
+    rep = getattr(engine, "dispatch_report", None)
+    if rep is None:
+        return None
+    return rep()
+
+
 def scheduler_summary(stats) -> dict:
     """The full nested summary a ``SchedulerStats`` emits."""
     d = {"schema_version": SCHEMA_VERSION,
@@ -176,4 +201,4 @@ def scheduler_summary(stats) -> dict:
 __all__ = ["SCHEMA_VERSION", "SCHEMA", "scheduler_summary",
            "stages_section", "store_section", "shards_section",
            "rpc_section", "trace_section", "precompute_section",
-           "telemetry_section"]
+           "telemetry_section", "dispatch_section"]

@@ -74,6 +74,11 @@ class SchedulerStats:
     build_hits: int = 0
     build_misses: int = 0
     last_dedup_ratio: Optional[float] = None
+    # induced-subgraph density seen by the host pipeline (sum of per-
+    # batch mean edges/subgraph; divide by n_density for the mean) —
+    # what per-batch adaptive dispatch keys its FLOP fallback on
+    batch_edges_total: float = 0.0
+    n_density: int = 0
     # sharded feature store only: cumulative host->device bytes PER SHARD
     # (empty for unsharded deployments)
     shard_bytes: List[int] = field(default_factory=list)
@@ -111,6 +116,13 @@ class SchedulerStats:
         """Subgraph-row cache hit rate (Build stage skipped on a hit)."""
         total = self.build_hits + self.build_misses
         return self.build_hits / total if total else 0.0
+
+    @property
+    def batch_edges(self) -> float:
+        """Mean measured edges per induced subgraph across all batches
+        (0.0 until the first Build stage reports density)."""
+        return self.batch_edges_total / self.n_density \
+            if self.n_density else 0.0
 
     @property
     def transfer_ratio(self) -> float:
@@ -412,7 +424,8 @@ class PipelineScheduler:
                           cache_misses: int = 0, build_hits: int = 0,
                           build_misses: int = 0,
                           dedup_ratio: Optional[float] = None,
-                          shard_bytes: Optional[Sequence[int]] = None):
+                          shard_bytes: Optional[Sequence[int]] = None,
+                          batch_edges: Optional[float] = None):
         """Accumulate transfer/cache counters for one prepared batch.
 
         Called by the host side itself (it alone knows what it shipped and
@@ -429,6 +442,9 @@ class PipelineScheduler:
             s.build_misses += int(build_misses)
             if dedup_ratio is not None:
                 s.last_dedup_ratio = float(dedup_ratio)
+            if batch_edges is not None:
+                s.batch_edges_total += float(batch_edges)
+                s.n_density += 1
             if shard_bytes is not None:
                 if len(s.shard_bytes) < len(shard_bytes):
                     s.shard_bytes += [0] * (len(shard_bytes)
@@ -561,7 +577,8 @@ class PipelineScheduler:
         with self._lock:       # store-metric baseline for call-local delta
             base = (self.stats.bytes_shipped, self.stats.bytes_dense,
                     self.stats.cache_hits, self.stats.cache_misses,
-                    self.stats.build_hits, self.stats.build_misses)
+                    self.stats.build_hits, self.stats.build_misses,
+                    self.stats.batch_edges_total, self.stats.n_density)
         t0 = time.perf_counter()
         if not overlap or self.depth == 1:
             outs = []
@@ -611,5 +628,7 @@ class PipelineScheduler:
             call.cache_misses = self.stats.cache_misses - base[3]
             call.build_hits = self.stats.build_hits - base[4]
             call.build_misses = self.stats.build_misses - base[5]
+            call.batch_edges_total = self.stats.batch_edges_total - base[6]
+            call.n_density = self.stats.n_density - base[7]
             call.last_dedup_ratio = self.stats.last_dedup_ratio
         return outs, call

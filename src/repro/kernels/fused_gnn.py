@@ -35,6 +35,15 @@ from jax.experimental import pallas as pl
 
 ACTS = {"none": lambda x: x, "relu": jax.nn.relu, "elu": jax.nn.elu}
 
+# block_f autotune grid (obs.calib.run_block_autotune): candidate output-
+# feature block widths, all 128-lane multiples except the 64 half-tile
+# for narrow heads. bf partitions Fout COLUMNS only — every candidate
+# computes each output column from the identical full-[Fin]/[N] reduction,
+# so tuning block_f never changes numerics, only VMEM footprint vs grid
+# parallelism. Candidates that don't divide Fout are skipped by the tuner
+# (the kernel asserts Fout % bf == 0).
+BLOCK_F_CANDIDATES = (64, 128, 256, 512)
+
 
 def _kernel(a_ref, h_ref, wn_ref, ws_ref, b_ref, m_ref, o_ref, *,
             act: str, use_agg: bool, use_self: bool):

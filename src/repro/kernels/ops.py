@@ -11,8 +11,10 @@ from __future__ import annotations
 import jax
 
 from repro.kernels import ref
+from repro.kernels.fused_gnn import BLOCK_F_CANDIDATES  # noqa: F401
 from repro.kernels.fused_gnn import fused_gnn_layer as _fused_pallas
 from repro.kernels.gat_attention import gat_attention as _gat_pallas
+from repro.kernels.scatter_gather import BLOCK_E_CANDIDATES  # noqa: F401
 from repro.kernels.scatter_gather import \
     scatter_gather_aggregate as _sg_pallas
 

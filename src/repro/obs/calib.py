@@ -23,11 +23,20 @@ choices (dense vs sg for the same op), which is what dispatch needs.
 """
 from __future__ import annotations
 
+import hashlib
 import threading
-from typing import Dict, List, Tuple
+from typing import Dict, List, Optional, Tuple
+
+import numpy as np
 
 from repro.obs.hist import LogHistogram
 from repro.obs.trace import now
+
+CALIB_SCHEMA = 1
+
+
+class CalibrationArtifactError(RuntimeError):
+    """Persisted calibration does not match the live deployment."""
 
 
 def op_label(ops: Tuple) -> str:
@@ -65,6 +74,10 @@ class CalibrationTable:
         self._hists: Dict[Tuple[str, str, int], LogHistogram] = {}
         self._lock = threading.Lock()
         self.passes = 0
+        # bumped on every record — dispatch policies key their cached
+        # per-bucket decisions on it, so a table that stops growing
+        # (warmup over) costs one dict probe per batch, not a re-solve
+        self.version = 0
 
     def record(self, label: str, mode: str, bucket: int,
                dur_s: float) -> None:
@@ -73,6 +86,7 @@ class CalibrationTable:
             h = self._hists.get(key)
             if h is None:
                 h = self._hists[key] = LogHistogram()
+            self.version += 1
         h.record(dur_s)
 
     def rows(self) -> List[dict]:
@@ -108,6 +122,29 @@ class CalibrationTable:
 
     def to_dict(self) -> dict:
         return {"passes": self.passes, "rows": self.rows()}
+
+    def to_cells(self) -> dict:
+        """Lossless serialization: every cell's full sparse histogram
+        (``rows()`` keeps only the summary stats) — what persistence
+        saves so a restarted server dispatches from the same p50s."""
+        with self._lock:
+            items = sorted(self._hists.items())
+        return {"passes": self.passes,
+                "cells": [{"op": label, "mode": mode, "bucket": bucket,
+                           "hist": h.to_dict()}
+                          for (label, mode, bucket), h in items]}
+
+    @classmethod
+    def from_cells(cls, d: dict) -> "CalibrationTable":
+        """Inverse of ``to_cells``."""
+        t = cls()
+        t.passes = int(d.get("passes", 0))
+        for cell in d.get("cells", ()):
+            key = (str(cell["op"]), str(cell["mode"]),
+                   int(cell["bucket"]))
+            t._hists[key] = LogHistogram.from_dict(cell["hist"])
+            t.version += 1
+        return t
 
     def __len__(self) -> int:
         with self._lock:
@@ -152,5 +189,213 @@ def run_instrumented(program, params, batch, impl: str,
     table.passes += 1
 
 
-__all__ = ["CalibrationTable", "run_instrumented", "op_label",
-           "op_mode", "size_bucket"]
+# ---------------------------------------------------------------------------
+# warmup / exploration policy
+
+
+class WarmupSchedule:
+    """Deterministic seeded exploration schedule for cold table cells.
+
+    Per size-bucket, the first ``2 * passes`` dispatch decisions each
+    trigger one instrumented eager pass through a FORCED mode vector
+    (all-mux-dense / all-mux-sg, alternating; the seed picks which side
+    goes first per bucket). The forced pass's outputs are discarded —
+    serving itself stays on the fallback decision during warmup, so a
+    dispatch-enabled run remains bitwise-identical to its forced-mode
+    twin while both mode columns of the table fill in."""
+
+    def __init__(self, passes: int = 4, seed: int = 0):
+        self.passes = int(passes)
+        self.seed = int(seed)
+        self._done: Dict[int, int] = {}
+        self._lock = threading.Lock()
+        self.history: List[Tuple[int, str]] = []   # (bucket, mode) order
+
+    def _first(self, bucket: int) -> Tuple[str, str]:
+        r = np.random.default_rng((self.seed, bucket)).integers(2)
+        return ("dense", "sg") if r == 0 else ("sg", "dense")
+
+    def next_mode(self, bucket: int) -> Optional[str]:
+        """Consume one warmup slot for ``bucket``; None once exhausted."""
+        with self._lock:
+            k = self._done.get(bucket, 0)
+            if k >= 2 * self.passes:
+                return None
+            self._done[bucket] = k + 1
+            mode = self._first(bucket)[k % 2]
+            self.history.append((bucket, mode))
+            return mode
+
+    def active(self, bucket: int) -> bool:
+        with self._lock:
+            return self._done.get(bucket, 0) < 2 * self.passes
+
+    def state(self) -> dict:
+        with self._lock:
+            return {"passes": self.passes, "seed": self.seed,
+                    "done": {int(b): int(k)
+                             for b, k in sorted(self._done.items())}}
+
+
+# ---------------------------------------------------------------------------
+# Pallas block-size autotune (rides the same table)
+
+# cell naming for tuned kernels: op="fused_gnn" mode="pallas/bf=<B>",
+# op="scatter_gather" mode="pallas/be=<B>" — same (op, mode, bucket)
+# key space as the per-op cells, so persistence and reports carry both
+
+
+def run_block_autotune(program, params, batch, table: CalibrationTable,
+                       ) -> None:
+    """Time the Pallas fused / scatter-gather kernels over their block
+    candidate grids on THIS batch's arrays and record the walltimes as
+    table cells. One warm (untimed) call per candidate keeps compile
+    time out of the p50s. Outputs are discarded — like
+    ``run_instrumented``, tuning never changes serving results."""
+    import jax
+
+    from repro.core.program import Transform
+    from repro.kernels import ops as kops
+    from repro.kernels.fused_gnn import BLOCK_F_CANDIDATES
+    from repro.kernels.scatter_gather import BLOCK_E_CANDIDATES
+
+    bucket = size_bucket(batch)
+    h = batch["feats"]
+    adj = batch.get("adj", batch.get("adj_mean"))
+    w = None
+    for op in program.layer0:        # representative Fout: first FT weight
+        if isinstance(op, Transform):
+            w = params["layer0"][op.w]
+            break
+    if adj is not None and w is not None:
+        fout = int(w.shape[1])
+        for bf in BLOCK_F_CANDIDATES:
+            if bf > fout or fout % bf:
+                continue
+            args = (adj, h, w, None, None, batch.get("mask"))
+            jax.block_until_ready(
+                kops.fused_gnn_layer(*args, block_f=bf))
+            t0 = now()
+            jax.block_until_ready(
+                kops.fused_gnn_layer(*args, block_f=bf))
+            table.record("fused_gnn", f"pallas/bf={bf}", bucket,
+                         now() - t0)
+    if "edge_src" in batch:
+        for be in BLOCK_E_CANDIDATES:
+            args = (batch["edge_src"], batch["edge_dst"],
+                    batch["edge_w"], h)
+            jax.block_until_ready(
+                kops.scatter_gather_aggregate(*args, block_e=be))
+            t0 = now()
+            jax.block_until_ready(
+                kops.scatter_gather_aggregate(*args, block_e=be))
+            table.record("scatter_gather", f"pallas/be={be}", bucket,
+                         now() - t0)
+
+
+def best_block(table: CalibrationTable, kernel: str, prefix: str,
+               candidates, bucket: int) -> Optional[int]:
+    """Lowest-p50 candidate for one tuned kernel at ``bucket``, or None
+    until EVERY candidate cell is populated (a partially explored grid
+    must not override the default — the unexplored candidate might win).
+    Candidates with no cell at all (e.g. a bf that does not divide this
+    deployment's Fout, skipped by the tuner) are excluded from the
+    completeness requirement when no candidate has a cell yet."""
+    seen = []
+    for c in candidates:
+        v = table.lookup(kernel, f"pallas/{prefix}{c}", bucket)
+        seen.append((c, v))
+    with_cells = [(c, v) for c, v in seen if v is not None]
+    if not with_cells:
+        return None
+    # the tuner records every legal candidate in one pass, so "some but
+    # not all legal candidates" only happens mid-pass — wait it out
+    legal = {c for c, _ in with_cells}
+    if any(v is None for c, v in seen if c in legal):
+        return None
+    return min(with_cells, key=lambda cv: cv[1])[0]
+
+
+# ---------------------------------------------------------------------------
+# persistence (repro.ckpt) — a restarted server dispatches warm
+
+
+def _sha(*arrays) -> str:
+    h = hashlib.sha256()
+    for a in arrays:
+        a = np.ascontiguousarray(a)
+        h.update(str((a.dtype.str, a.shape)).encode())
+        h.update(a.tobytes())
+    return h.hexdigest()[:16]
+
+
+def graph_structure_fingerprint(graph) -> str:
+    """CSR structure only — features don't move op latencies, so a
+    feature refresh keeps the table warm while an edge-structure change
+    (different densities) invalidates it."""
+    return _sha(graph.indptr, graph.indices)
+
+
+def calibration_signature(cfg, impl: str) -> dict:
+    """Everything the measured step latencies are a function of besides
+    the graph: the model shape (op stream + feature widths + receptive
+    field, which also fixes the size bucket) and the kernel substrate."""
+    return {"kind": cfg.kind, "n_layers": cfg.n_layers,
+            "f_in": cfg.f_in, "f_hidden": cfg.f_hidden,
+            "receptive_field": cfg.receptive_field, "impl": impl}
+
+
+def save_calibration(path: str, table: CalibrationTable, *, graph, cfg,
+                     impl: str) -> str:
+    """Persist the table (all cells, incl. block-size cells) as one
+    committed ``repro.ckpt`` step stamped with the deployment
+    fingerprints; returns the artifact directory."""
+    from repro.ckpt import checkpoint as ckpt
+    extra = {"schema": CALIB_SCHEMA,
+             "graph_fingerprint": graph_structure_fingerprint(graph),
+             "model": calibration_signature(cfg, impl),
+             "table": table.to_cells()}
+    # the ckpt layout wants an array tree; the table itself is manifest
+    # metadata (pure JSON), so the tree is a one-cell sentinel
+    ckpt.save(path, 0, {"calib_cells": np.array([len(table)], np.int64)},
+              extra=extra)
+    return path
+
+
+def load_calibration(path: str, *, graph, cfg,
+                     impl: str) -> CalibrationTable:
+    """Load + validate a persisted table against the live deployment.
+    Raises ``CalibrationArtifactError`` naming the first mismatched
+    stamp — stale measured latencies must never drive dispatch."""
+    from repro.ckpt import checkpoint as ckpt
+    _, _, extra = ckpt.restore(
+        path, {"calib_cells": np.zeros(1, np.int64)})
+    remedy = (f"delete {path!r} and let the engine re-explore (the "
+              f"dispatch warmup policy rebuilds the table on the next "
+              f"run), or point DispatchConfig(artifact=...) at the "
+              f"matching deployment's artifact")
+    checks = [
+        ("schema", CALIB_SCHEMA,
+         "the calibration artifact schema has changed"),
+        ("graph_fingerprint", graph_structure_fingerprint(graph),
+         "the graph's CSR structure has changed since the table was "
+         "measured — its densities (and so the measured mode costs) no "
+         "longer describe this deployment"),
+        ("model", calibration_signature(cfg, impl),
+         "the model configuration or kernel substrate differs from the "
+         "one the table was measured on"),
+    ]
+    for key, live, why in checks:
+        if extra.get(key) != live:
+            raise CalibrationArtifactError(
+                f"stale calibration artifact at {path!r}: {key} "
+                f"mismatch (artifact {extra.get(key)!r} vs live "
+                f"{live!r}). {why}; {remedy}.")
+    return CalibrationTable.from_cells(extra["table"])
+
+
+__all__ = ["CalibrationTable", "CalibrationArtifactError",
+           "WarmupSchedule", "run_instrumented", "run_block_autotune",
+           "best_block", "save_calibration", "load_calibration",
+           "calibration_signature", "graph_structure_fingerprint",
+           "op_label", "op_mode", "size_bucket"]

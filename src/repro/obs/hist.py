@@ -135,6 +135,29 @@ class LogHistogram:
                 **{k: round(v, 9) for k, v in self.percentiles().items()},
                 "counts": {int(i): int(self.counts[i]) for i in nz}}
 
+    @classmethod
+    def from_dict(cls, d: dict) -> "LogHistogram":
+        """Inverse of ``to_dict``: rebuild a histogram from its sparse
+        serialization (bucket counts restore exactly, so quantiles are
+        bit-identical; ``total`` is recovered as mean*count). Accepts
+        string bucket keys — JSON round-trips turn int keys into str."""
+        if d.get("scheme") != "log2":
+            raise ValueError(f"unknown histogram scheme {d.get('scheme')!r}")
+        if d.get("buckets_per_doubling") != _BUCKETS_PER_DOUBLING:
+            raise ValueError(
+                f"bucket scheme mismatch: serialized "
+                f"{d.get('buckets_per_doubling')} buckets/doubling vs "
+                f"this build's {_BUCKETS_PER_DOUBLING}")
+        h = cls(value_floor=float(d.get("value_floor", 1e-6)))
+        for i, c in (d.get("counts") or {}).items():
+            h.counts[min(int(i), len(h.counts) - 1)] += int(c)
+        h.count = int(d.get("count", 0))
+        h.total = float(d.get("mean", 0.0)) * h.count
+        if h.count:
+            h.min = float(d.get("min", 0.0))
+            h.max = float(d.get("max", 0.0))
+        return h
+
     @property
     def nbytes(self) -> int:
         """Fixed memory footprint (the O(1)-in-samples property)."""

@@ -28,10 +28,11 @@ import numpy as np
 from repro.core.config import ServingConfig
 from repro.core.dse import DSEPlan, TPUSpec, explore, validate_models
 from repro.core.engine import DecoupledEngine
-from repro.core.report_schema import (SCHEMA_VERSION, precompute_section,
-                                      rpc_section, shards_section,
-                                      stages_section, store_section,
-                                      telemetry_section, trace_section)
+from repro.core.report_schema import (SCHEMA_VERSION, dispatch_section,
+                                      precompute_section, rpc_section,
+                                      shards_section, stages_section,
+                                      store_section, telemetry_section,
+                                      trace_section)
 from repro.obs.hist import LogHistogram, Reservoir
 
 DEFAULT_MODEL = "default"
@@ -228,6 +229,9 @@ class _ModelLane:
         telemetry = telemetry_section(self.engine.telemetry)
         if telemetry is not None:
             r["telemetry"] = telemetry
+        dispatch = dispatch_section(self.engine)
+        if dispatch is not None:
+            r["dispatch"] = dispatch
         return r
 
 

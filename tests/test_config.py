@@ -162,7 +162,7 @@ class TestReportSchema:
             for key in ("t_wall", "t_host", "t_device", "t_init"):
                 assert key in s["latency"]
             assert set(s["stages"]) == {"times", "overlap", "batches",
-                                        "build_hit_rate"}
+                                        "build_hit_rate", "batch_edges"}
             for key in ("bytes_shipped", "bytes_dense", "transfer_ratio",
                         "cache_hit_rate", "dedup_ratio"):
                 assert key in s["store"]
